@@ -1,0 +1,79 @@
+"""Roofline table generator: reads results/dryrun/*.json -> markdown/CSV.
+
+Used to produce EXPERIMENTS.md §Dry-run and §Roofline. Run after
+`python -m repro.launch.dryrun --all --mesh both`.
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load(out_dir="results/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def markdown_table(cells, mesh="pod", variant="baseline"):
+    rows = []
+    hdr = ("| arch | shape | kind | mem/chip | T_comp | T_mem | T_coll | dominant "
+           "| MODEL_FLOPS/HLO | status |")
+    rows.append(hdr)
+    rows.append("|" + "---|" * 10)
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c.get("mesh") != mesh or c.get("variant", "baseline") != variant:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | - | - | - | - | - | - | - "
+                        f"| SKIP: {c['reason'][:40]} |")
+            continue
+        if c["status"] != "ok" or "roofline" not in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c.get('kind','-')} | - | - | - "
+                        f"| - | - | - | {c['status']} |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} "
+            f"| {c['memory']['peak_estimate_gib']:.1f}GiB "
+            f"| {fmt_s(r['t_comp_s'])} | {fmt_s(r['t_mem_s'])} | {fmt_s(r['t_coll_s'])} "
+            f"| **{r['dominant']}** | {c.get('useful_flops_ratio', '-')} | ok |")
+    return "\n".join(rows)
+
+
+def run():
+    cells = [c for c in load() if c.get("variant", "baseline") == "baseline"]
+    ok = sum(1 for c in cells if c["status"] == "ok")
+    skip = sum(1 for c in cells if c["status"] == "skipped")
+    fail = sum(1 for c in cells if c["status"] not in ("ok", "skipped"))
+    emit("roofline/cells", 0.0, f"ok={ok};skipped={skip};failed={fail}")
+    for c in cells:
+        if c["status"] == "ok" and "roofline" in c:
+            r = c["roofline"]
+            emit(f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                 r["bound_s"] * 1e6,
+                 f"dominant={r['dominant']};mem_gib={c['memory']['peak_estimate_gib']};"
+                 f"useful={c.get('useful_flops_ratio')}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        cells = load()
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(markdown_table(cells, "pod"))
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(markdown_table(cells, "multipod"))
+    else:
+        run()

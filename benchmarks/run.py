@@ -1,0 +1,20 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import fig1_quant_sparsity, table1_resources, fig4_energy
+    from . import table2_direct_rate, table3_throughput, roofline
+    table1_resources.run()
+    fig4_energy.run()
+    table2_direct_rate.run()
+    table3_throughput.run()
+    fig1_quant_sparsity.run()
+    roofline.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table I: area/power by layer, int4 vs fp32 hardware.
+
+On TPU the FPGA LUT/BRAM columns map to weight-storage bytes and the power
+column to the calibrated FPGA power model (core.energy). We reproduce the
+paper's per-layer table for the full VGG9-CIFAR100 config (perf^2 allocation
+(1,28,12,54,16,72,70,19,4)) and check the two headline ratios:
+int4 uses ~8x fewer LUT-bytes (fp32 LUTRAM -> int4), and fp32 burns ~2.8x
+more dynamic power.
+"""
+from repro.core.energy import power_model
+from repro.configs.vgg9_snn import PERF2_CIFAR100
+
+# full VGG9 (paper §V-A): 64C3-112C3-MP-192C3-216C3-MP-480C3-504C3-560C3-MP-1064-5000
+LAYERS = [
+    ("CONV_1_1", 3 * 64 * 9),       # weights (counts)
+    ("CONV_1_2", 64 * 112 * 9),
+    ("CONV_2_1", 112 * 192 * 9),
+    ("CONV_2_2", 192 * 216 * 9),
+    ("CONV_3_1", 216 * 480 * 9),
+    ("CONV_3_2", 480 * 504 * 9),
+    ("CONV_3_3", 504 * 560 * 9),
+    ("FC", 4 * 4 * 560 * 1064 + 1064 * 5000),
+]
+
+from .common import emit
+
+
+def run():
+    total = {"int4": 0.0, "fp32": 0.0}
+    power = {"int4": 0.0, "fp32": 0.0}
+    for (name, n_weights), nc in zip(LAYERS, PERF2_CIFAR100[1:]):
+        for prec, bytes_per in (("int4", 0.5), ("fp32", 4.0)):
+            wb = n_weights * bytes_per
+            pm = power_model(prec)
+            p = pm.layer_power(nc, wb)
+            total[prec] += wb
+            power[prec] += p
+            if prec == "int4":
+                emit(f"table1/{name}", 0.0,
+                     f"int4_bytes={wb:.0f};fp32_bytes={n_weights*4:.0f};"
+                     f"int4_power_w={p:.3f}")
+    mem_ratio = total["fp32"] / total["int4"]
+    pow_ratio = power["fp32"] / power["int4"]
+    emit("table1/memory_ratio", 0.0, f"fp32_over_int4={mem_ratio:.1f};paper=8x_LUT_3.4x_BRAM")
+    emit("table1/power_ratio", 0.0, f"fp32_over_int4={pow_ratio:.2f};paper=2.82")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""The paper's §III ablation as a runnable study: sweep weight precision and
+measure the spike-count response (quantization-sparsity interplay) plus the
+projected FPGA energy via the Eq. 3 workload model.
+
+    PYTHONPATH=src python examples/quant_sparsity_study.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import vgg9_snn
+from repro.core.energy import energy_per_image
+from repro.core.workload import balance_allocation, conv_workload
+from repro.data.synthetic import image_batch
+from repro.models.vgg9 import init_vgg9, vgg9_forward, vgg9_loss
+from repro.train.optim import adamw
+from repro.train.schedule import constant
+from repro.train.train_step import init_train_state, make_train_step
+
+BASE = dataclasses.replace(vgg9_snn.TINY, num_classes=4)
+
+
+def train(cfg, steps=60):
+    opt = adamw(weight_decay=0.0)
+    step = jax.jit(make_train_step(lambda p, b: vgg9_loss(p, b, cfg), opt,
+                                   constant(2e-3)))
+    state = init_train_state(init_vgg9(jax.random.PRNGKey(0), cfg), opt)
+    for i in range(steps):
+        state, _ = step(state, image_batch(0, i, 32, num_classes=4, hw=cfg.img_hw))
+    return state["params"]
+
+
+print(f"{'precision':>10} {'accuracy':>9} {'spikes/img':>11} {'energy (model)':>15}")
+for bits in (0, 8, 4, 3):
+    cfg = dataclasses.replace(BASE, quant_bits=bits)
+    params = train(cfg)
+    test = image_batch(55, 0, 64, num_classes=4, hw=cfg.img_hw)
+    logits, counts = vgg9_forward(params, test["images"], cfg)
+    acc = float((logits.argmax(-1) == test["labels"]).mean())
+    spikes = float(sum(float(v) for v in counts.values())) / 64
+
+    # project onto the FPGA cost model (per-image, balanced allocation)
+    convs = [c for c in counts if c.startswith("conv")][1:]
+    ls = [conv_workload(c, 16, 9, float(counts[c]) / 64) for c in convs]
+    alloc = balance_allocation(ls, 12)
+    bytes_per = 4.0 if bits == 0 else bits / 8
+    e = energy_per_image(ls, alloc, [9 * 16 * 12 * bytes_per] * len(ls),
+                         "fp32" if bits == 0 else "int4")
+    name = "fp32" if bits == 0 else f"int{bits}"
+    print(f"{name:>10} {acc:9.3f} {spikes:11.0f} {e['energy_j']*1e6:12.2f} uJ")

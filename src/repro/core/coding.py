@@ -1,0 +1,41 @@
+"""Input coding schemes for SNNs: direct coding and rate coding (paper §I, §V-D).
+
+Direct coding: the raw floating-point input is presented identically at every
+timestep; the *first convolution layer* produces floating-point membrane
+currents and its LIF layer emits the binary spikes that drive the rest of the
+network. Because the input is timestep-invariant, the input-layer convolution
+can be hoisted out of the timestep loop (computed once, reused T times) — the
+optimized hybrid path does this; the faithful path recomputes per timestep.
+
+Rate coding: each pixel intensity p in [0,1] becomes an independent Bernoulli
+spike train with rate p (one draw per timestep).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def direct_code(x: jax.Array, num_steps: int) -> jax.Array:
+    """Repeat input over T timesteps: [B, ...] -> [T, B, ...]."""
+    return jnp.broadcast_to(x[None], (num_steps,) + x.shape)
+
+
+def rate_code(key: jax.Array, x: jax.Array, num_steps: int) -> jax.Array:
+    """Bernoulli spike trains with per-pixel rate x (clipped to [0,1]).
+
+    Returns binary [T, B, ...] in x.dtype.
+    """
+    p = jnp.clip(x, 0.0, 1.0)
+    u = jax.random.uniform(key, (num_steps,) + x.shape, dtype=jnp.float32)
+    return (u < p[None].astype(jnp.float32)).astype(x.dtype)
+
+
+def spike_count(spikes: jax.Array) -> jax.Array:
+    """Total number of spikes in a (binary) spike train."""
+    return jnp.sum(spikes != 0)
+
+
+def sparsity(spikes: jax.Array) -> jax.Array:
+    """Fraction of zero entries (the event-driven skip opportunity)."""
+    return 1.0 - jnp.mean((spikes != 0).astype(jnp.float32))

@@ -1,0 +1,134 @@
+"""Energy/latency models: the paper's FPGA cost model + the TPU roofline model.
+
+FPGA side (reproduction): per-image energy = sum over layers of
+P_dyn(layer) * t(layer) (+ optional static energy), with layer latencies from
+the Eq. 3 workload model. Coefficients are calibrated to the paper's
+Table I (CIFAR100 perf^2 instance-level dynamic power, 100 MHz clock) so that
+Table II / Fig. 4 ratios reproduce.
+
+TPU side (target hardware): three-term roofline used by §Roofline —
+    T_comp = FLOPs  / (chips * PEAK_FLOPS)
+    T_mem  = bytes  / (chips * HBM_BW)
+    T_coll = coll_bytes / (chips * ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import numpy as np
+
+from .workload import LayerWorkload, layer_latencies
+
+# ---------------------------------------------------------------------------
+# TPU roofline constants (v5e-like target; see DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12   # FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (conservative single-link)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    t_comp: float
+    t_mem: float
+    t_coll: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem, "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound(self) -> float:
+        """Roofline step time lower bound (s), assuming perfect overlap."""
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "t_comp_s": self.t_comp,
+            "t_mem_s": self.t_mem,
+            "t_coll_s": self.t_coll,
+            "dominant": self.dominant,
+            "bound_s": self.bound,
+        }
+
+
+def roofline(flops: float, bytes_hbm: float, coll_bytes: float, chips: int) -> RooflineTerms:
+    """Terms in seconds. Pass chips=1 when the inputs are already per-chip
+    quantities (the dry-run pieces are — GSPMD-partitioned HLO)."""
+    return RooflineTerms(
+        t_comp=flops / (chips * PEAK_FLOPS_BF16),
+        t_mem=bytes_hbm / (chips * HBM_BW),
+        t_coll=coll_bytes / (chips * ICI_BW),
+    )
+
+
+# ---------------------------------------------------------------------------
+# FPGA energy model (paper reproduction)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FPGAPowerModel:
+    """Per-layer dynamic power = p_per_nc * NC + p_mem * weight_bytes.
+
+    Coefficients calibrated per precision from the paper's Table I
+    (CIFAR100 perf^2): int4 total dynamic 1.231 W over 288 NCs; fp32 total
+    3.471 W over the same allocation. Static power: 3.13 W (int4) /
+    3.22 W (fp32) for the full device.
+    """
+
+    p_per_nc: float           # W per neural core (dynamic)
+    p_mem_per_byte: float     # W per byte of on-chip weight storage
+    p_static: float           # W (whole device)
+    f_clk_hz: float = 100e6
+
+    def layer_power(self, nc: int, weight_bytes: float) -> float:
+        return self.p_per_nc * nc + self.p_mem_per_byte * weight_bytes
+
+
+# Calibration: Table I int4 totals 1.231 W dynamic across allocation
+# (1,28,12,54,16,72,70,19,4) = 276 cores and ~1.6 MB int4 weights;
+# fp32 totals 3.471 W across the same cores and ~12.9 MB fp32 weights.
+# Splitting dynamic power ~60/40 between compute and memory reproduces the
+# per-layer ordering in Table I within ~20%.
+INT4_POWER = FPGAPowerModel(p_per_nc=1.231 * 0.6 / 276, p_mem_per_byte=1.231 * 0.4 / 1.6e6, p_static=3.13)
+FP32_POWER = FPGAPowerModel(p_per_nc=3.471 * 0.6 / 276, p_mem_per_byte=3.471 * 0.4 / 12.9e6, p_static=3.22)
+
+
+def power_model(precision: str) -> FPGAPowerModel:
+    return {"int4": INT4_POWER, "fp32": FP32_POWER}[precision]
+
+
+def energy_per_image(
+    workloads: Sequence[LayerWorkload],
+    alloc: Sequence[int],
+    weight_bytes: Sequence[float],
+    precision: str = "int4",
+    include_static: bool = False,
+) -> Dict[str, float]:
+    """Per-image energy/latency following the paper's §V-C methodology.
+
+    Layers execute sequentially through BRAM-staged spike trains, so image
+    latency = sum of layer latencies; energy sums per-layer dynamic power x
+    per-layer time (the paper's "summing the energy per layer").
+    """
+    pm = power_model(precision)
+    lat = layer_latencies(workloads, alloc, pm.f_clk_hz)
+    p = np.array([pm.layer_power(a, wb) for a, wb in zip(alloc, weight_bytes)])
+    e_dyn = float(np.sum(p * lat))
+    t = float(np.sum(lat))
+    e = e_dyn + (pm.p_static * t if include_static else 0.0)
+    return {
+        "latency_s": t,
+        "energy_j": e,
+        "energy_dynamic_j": e_dyn,
+        "avg_power_w": e / t if t > 0 else 0.0,
+        # layers are pipelined through BRAM-staged spike trains (paper §IV):
+        # steady-state throughput is set by the slowest layer, latency by the
+        # sum; at steady state every layer instance draws power concurrently
+        "throughput_fps": 1.0 / float(np.max(lat)) if t > 0 else float("inf"),
+        "power_pipelined_w": float(np.sum(p)),
+        "energy_pipelined_j": float(np.sum(p) * np.max(lat)),
+    }

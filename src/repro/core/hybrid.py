@@ -1,0 +1,85 @@
+"""Hybrid dense/sparse execution planning (paper §IV).
+
+The planner is the software analogue of the paper's architecture overview:
+the direct-coded input layer (dense, non-binary activations) goes to the
+dense path; every later layer (binary spike activations) goes to the sparse,
+event-driven path. Core counts per layer come from the Eq. 3 workload model;
+`perf^k` configurations scale the lightweight allocation by k.
+
+On TPU the "paths" select kernels: dense path -> kernels/dense_conv_lif
+(weight-stationary MXU conv fused with LIF); sparse path ->
+kernels/spike_conv (occupancy-gated binary-spike matmul). The plan also
+carries the FPGA-model core allocation so the energy benchmarks can evaluate
+the same network under the paper's cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from .workload import (
+    LayerWorkload,
+    balance_allocation,
+    conv_workload,
+    dense_input_workload,
+    fc_workload,
+    latency_overheads,
+    scale_allocation,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    name: str
+    path: str          # 'dense' | 'sparse'
+    cores: int         # NC allocation (FPGA model) / relative share (TPU)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridPlan:
+    layers: List[LayerPlan]
+    overheads: List[float]     # per-layer latency share, paper-style
+    budget: int
+
+    def cores(self) -> List[int]:
+        return [l.cores for l in self.layers]
+
+
+def plan_hybrid(
+    layer_specs: Sequence[dict],
+    spike_counts: Dict[str, float],
+    budget: int,
+    perf_scale: int = 1,
+) -> HybridPlan:
+    """Build the hybrid plan for a network.
+
+    layer_specs: list of dicts with keys
+        name, kind ('conv'|'fc'|'dense_input'), c_out / n_out,
+        filter_coeffs (conv), h_out/w_out/timesteps (dense_input).
+    spike_counts: measured sum of input spikes per layer (Eq. 3 S terms),
+        from a profiling pass (`core.sparsity.SpikeStats`).
+    budget: total NC budget for the lightweight configuration.
+    perf_scale: 1 for LW, 2 for perf^2, 4 for perf^4.
+    """
+    workloads: List[LayerWorkload] = []
+    for spec in layer_specs:
+        kind = spec["kind"]
+        name = spec["name"]
+        if kind == "dense_input":
+            workloads.append(
+                dense_input_workload(name, spec["h_out"], spec["w_out"], spec["c_out"], spec["timesteps"])
+            )
+        elif kind == "conv":
+            workloads.append(conv_workload(name, spec["c_out"], spec["filter_coeffs"], spike_counts[name]))
+        elif kind == "fc":
+            workloads.append(fc_workload(name, spec["n_out"], spike_counts[name]))
+        else:
+            raise ValueError(f"unknown layer kind {kind}")
+
+    alloc = scale_allocation(balance_allocation(workloads, budget), perf_scale)
+    overheads = latency_overheads(workloads, alloc).tolist()
+    layers = [
+        LayerPlan(w.name, "dense" if w.kind == "dense_input" else "sparse", a)
+        for w, a in zip(workloads, alloc)
+    ]
+    return HybridPlan(layers, overheads, budget * perf_scale)

@@ -1,0 +1,131 @@
+"""Leaky integrate-and-fire neuron dynamics (paper Eq. 1-2) with surrogate gradients.
+
+The paper's LIF (soft reset by threshold subtraction):
+
+    u_j[t+1] = beta * u_j[t] + sum_i w_ij * s_i[t] - s_j[t] * theta      (Eq. 1)
+    s_j[t]   = 1 if u_j[t] > theta else 0                                 (Eq. 2)
+
+Training uses surrogate gradients (fast sigmoid, snnTorch default slope=25).
+The same leaky-integrator scan generalizes to RG-LRU (no threshold) — see
+`repro.models.rglru`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Neuronal hyperparameters. Paper defaults: beta=0.15, theta=0.5."""
+
+    beta: float = 0.15
+    theta: float = 0.5
+    surrogate_slope: float = 25.0
+
+    def astuple(self):
+        return (self.beta, self.theta, self.surrogate_slope)
+
+
+# ---------------------------------------------------------------------------
+# Surrogate spike function
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_surrogate(u: jax.Array, theta: float | jax.Array, slope: float = 25.0) -> jax.Array:
+    """Heaviside(u - theta) forward; fast-sigmoid surrogate backward.
+
+    Forward is the exact Eq. 2 threshold. Backward uses
+    d s/d u = 1 / (1 + slope*|u - theta|)^2  (fast sigmoid derivative).
+    """
+    return (u > theta).astype(u.dtype)
+
+
+def _spike_fwd(u, theta, slope):
+    return spike_surrogate(u, theta, slope), (u, theta)
+
+
+def _spike_bwd(slope, res, g):
+    u, theta = res
+    x = u - theta
+    surr = 1.0 / (1.0 + slope * jnp.abs(x)) ** 2
+    du = g * surr.astype(g.dtype)
+    # theta enters as -theta: d/d theta = -surr; theta is usually a static float,
+    # but support array thresholds for completeness.
+    dtheta = -du if isinstance(theta, jax.Array) else None
+    return (du, dtheta)
+
+
+spike_surrogate.defvjp(_spike_fwd, _spike_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Single-step LIF update
+# ---------------------------------------------------------------------------
+
+def lif_step(
+    u: jax.Array,
+    current: jax.Array,
+    prev_spike: jax.Array,
+    p: LIFParams,
+) -> Tuple[jax.Array, jax.Array]:
+    """One LIF timestep per paper Eq. 1-2.
+
+    Args:
+      u: membrane potential at t (any shape).
+      current: weighted input current sum_i w_ij * s_i[t] (same shape).
+      prev_spike: s_j[t] of the *previous* evaluation (soft reset term).
+    Returns:
+      (u_next, spike) where spike = 1[u_next > theta].
+    """
+    u_next = p.beta * u + current - prev_spike * p.theta
+    s = spike_surrogate(u_next, p.theta, p.surrogate_slope)
+    return u_next, s
+
+
+def lif_scan(
+    currents: jax.Array,
+    p: LIFParams,
+    u0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run LIF over a [T, ...] current sequence with lax.scan.
+
+    Returns (spikes [T, ...], final membrane potential).
+    """
+    if u0 is None:
+        u0 = jnp.zeros(currents.shape[1:], currents.dtype)
+    s0 = jnp.zeros_like(u0)
+
+    def body(carry, cur):
+        u, s_prev = carry
+        u_next, s = lif_step(u, cur, s_prev, p)
+        return (u_next, s), s
+
+    (u_final, _), spikes = jax.lax.scan(body, (u0, s0), currents)
+    return spikes, u_final
+
+
+# ---------------------------------------------------------------------------
+# Generic leaky integrator (shared machinery with RG-LRU / SSM family)
+# ---------------------------------------------------------------------------
+
+def leaky_integrate(decay: jax.Array, inputs: jax.Array, h0: jax.Array | None = None):
+    """h[t+1] = decay * h[t] + inputs[t]; returns all h and the final state.
+
+    `decay` broadcasts against the state; this is LIF Eq. 1 without the
+    threshold/reset nonlinearity, and is exactly the RG-LRU recurrence with
+    per-channel gates when `decay` is an array.
+    """
+    if h0 is None:
+        h0 = jnp.zeros(inputs.shape[1:], inputs.dtype)
+
+    def body(h, x):
+        h = decay * h + x
+        return h, h
+
+    h_final, hs = jax.lax.scan(body, h0, inputs)
+    return hs, h_final

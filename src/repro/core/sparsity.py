@@ -1,0 +1,71 @@
+"""Layer-wise sparsity instrumentation (paper Fig. 1, Eq. 3 inputs).
+
+Spike counts per layer drive (a) the quantization-sparsity study, (b) the
+workload model used for core allocation, and (c) the energy model. Stats are
+gathered functionally: model forward passes return a `SpikeStats` pytree so
+everything stays jit-able and psum-reducible across data-parallel shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SpikeStats:
+    """Per-layer spike counts and element counts for one forward pass."""
+
+    counts: Dict[str, jax.Array]  # layer name -> total spikes (scalar)
+    sizes: Dict[str, jax.Array]   # layer name -> total elements (scalar)
+
+    def tree_flatten(self):
+        keys = sorted(self.counts)
+        return ([self.counts[k] for k in keys] + [self.sizes[k] for k in keys]), tuple(keys)
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        n = len(keys)
+        return cls(dict(zip(keys, children[:n])), dict(zip(keys, children[n:])))
+
+    @staticmethod
+    def empty() -> "SpikeStats":
+        return SpikeStats({}, {})
+
+    def record(self, name: str, spikes: jax.Array) -> "SpikeStats":
+        counts = dict(self.counts)
+        sizes = dict(self.sizes)
+        counts[name] = jnp.sum(spikes != 0).astype(jnp.float32)
+        sizes[name] = jnp.asarray(spikes.size, jnp.float32)
+        return SpikeStats(counts, sizes)
+
+    def total_spikes(self) -> jax.Array:
+        if not self.counts:
+            return jnp.asarray(0.0)
+        return sum(self.counts.values())
+
+    def layer_sparsity(self) -> Dict[str, jax.Array]:
+        return {k: 1.0 - self.counts[k] / self.sizes[k] for k in self.counts}
+
+    def cross_replica_sum(self, axis_names) -> "SpikeStats":
+        """psum stats across data-parallel shards (inside shard_map/pmap)."""
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), self)
+
+
+def tile_occupancy(spikes: jax.Array, tile: int = 128) -> jax.Array:
+    """Fraction of `tile`-wide blocks (last axis) containing >=1 spike.
+
+    This is the quantity that determines how much compute the TPU
+    occupancy-gated spike kernel can actually skip — the block-granular
+    analogue of the paper's per-event skipping.
+    """
+    flat = spikes.reshape(-1, spikes.shape[-1])
+    pad = (-flat.shape[-1]) % tile
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    blocks = flat.reshape(flat.shape[0], -1, tile)
+    occupied = jnp.any(blocks != 0, axis=-1)
+    return jnp.mean(occupied.astype(jnp.float32))

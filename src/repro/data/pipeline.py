@@ -1,0 +1,58 @@
+"""Sharded, deterministic, prefetching data pipeline.
+
+Batches are pure functions of (seed, step) (see synthetic.py), generated
+host-side and placed onto the mesh with the batch axis sharded over
+('pod','data'). Because generation is stateless, any restart or elastic
+re-mesh reproduces the exact global data order from the step counter alone —
+no data-loader checkpointing needed, and straggler hosts cannot desynchronize
+the stream.
+
+A small background-thread prefetcher overlaps host-side generation with
+device compute (double buffering).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class DataPipeline:
+    def __init__(self, make_batch: Callable[[int], Dict], mesh: Optional[Mesh] = None,
+                 batch_spec: Optional[P] = None, prefetch: int = 2):
+        """make_batch: step -> host batch pytree."""
+        self.make_batch = make_batch
+        self.mesh = mesh
+        self.batch_spec = batch_spec
+        self.prefetch = prefetch
+
+    def _place(self, batch):
+        if self.mesh is None:
+            return batch
+        sh = NamedSharding(self.mesh, self.batch_spec or P())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), batch)
+
+    def __call__(self, start_step: int = 0) -> Iterator:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put((step, self.make_batch(step)), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                step, batch = q.get()
+                yield step, self._place(batch)
+        finally:
+            stop.set()

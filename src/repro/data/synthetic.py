@@ -1,0 +1,59 @@
+"""Synthetic datasets (container is offline — see DESIGN.md §7).
+
+Image task: class-conditional oriented Gabor-like textures at CIFAR geometry
+(32x32x3) — learnable structure so the quantization-sparsity study trains to
+non-trivial accuracy. Token task: order-k Markov streams with class-dependent
+transition matrices (next-token-predictable).
+
+Everything is *stateless and step-keyed*: batch(step) is a pure function of
+(seed, step), which makes restarts/stragglers reproduce the exact data order
+(fault-tolerance requirement).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def image_batch(seed: int, step: int, batch: int, *, num_classes: int = 10,
+                hw: int = 32, dtype=jnp.float32):
+    """Class-conditional Gabor textures + noise. Returns {images, labels}."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (batch,), 0, num_classes)
+
+    # per-class orientation/frequency/phase
+    theta = labels.astype(jnp.float32) / num_classes * jnp.pi
+    freq = 2.0 + (labels % 3).astype(jnp.float32) * 1.5
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, hw), jnp.linspace(-1, 1, hw), indexing="ij")
+    phase = jax.random.uniform(k2, (batch, 1, 1)) * 2 * jnp.pi
+    proj = (xx[None] * jnp.cos(theta)[:, None, None]
+            + yy[None] * jnp.sin(theta)[:, None, None])
+    pattern = jnp.sin(proj * freq[:, None, None] * jnp.pi + phase) * 0.5 + 0.5
+    # class-dependent colour mix
+    colour = jax.nn.one_hot(labels % 3, 3) * 0.6 + 0.2
+    imgs = pattern[..., None] * colour[:, None, None, :]
+    imgs = imgs + jax.random.normal(k3, imgs.shape) * 0.08
+    shift = jax.random.uniform(k4, (batch, 1, 1, 1)) * 0.1
+    return {"images": jnp.clip(imgs + shift, 0, 1).astype(dtype),
+            "labels": labels}
+
+
+def token_batch(seed: int, step: int, batch: int, seq_len: int, vocab: int):
+    """Markov-ish token streams: tokens[t+1] = f(tokens[t]) with noise.
+
+    Returns {tokens, labels} where labels are next tokens (teacher forcing).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    # deterministic affine walk per row + uniform noise
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    stride = jax.random.randint(k2, (batch, 1), 1, 7)
+    pos = jnp.arange(seq_len + 1)[None]
+    stream = (start + stride * pos) % vocab
+    noise_key = jax.random.fold_in(key, 7)
+    flip = jax.random.bernoulli(noise_key, 0.05, stream.shape)
+    rand = jax.random.randint(jax.random.fold_in(key, 8), stream.shape, 0, vocab)
+    stream = jnp.where(flip, rand, stream)
+    return {"tokens": stream[:, :-1].astype(jnp.int32),
+            "labels": stream[:, 1:].astype(jnp.int32)}

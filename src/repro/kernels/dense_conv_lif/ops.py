@@ -1,0 +1,59 @@
+"""Jitted public wrapper for the dense-core fused conv+LIF (input layer)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..spike_conv.ref import im2col
+from .dense_conv_lif import dense_conv_lif
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "beta", "theta", "block_m", "block_n", "interpret"),
+)
+def input_layer_conv_lif(
+    image: jax.Array,
+    weights: jax.Array,
+    bias: jax.Array,
+    *,
+    num_steps: int,
+    beta: float = 0.15,
+    theta: float = 0.5,
+    block_m: int = 256,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """Direct-coded input layer: [B,H,W,3] image -> spikes [T,B,H,W,Cout].
+
+    Computes the convolution once (direct coding repeats the image each
+    timestep) and runs the T-step LIF recurrence fused in the kernel.
+    """
+    b, h, w, cin = image.shape
+    kh, kw, _, cout = weights.shape
+    patches = im2col(image, kh, kw, "SAME")            # [M, K], K = kh*kw*cin
+    w2d = weights.reshape(kh * kw * cin, cout)
+
+    m, k = patches.shape
+    block_m = min(block_m, _round_up(m))
+    block_n = min(block_n, _round_up(cout))
+    # pad K to a lane multiple, M/N to block multiples
+    kpad = _round_up(k, 128)
+    patches = jnp.pad(patches, ((0, (-m) % block_m), (0, kpad - k)))
+    w2d = jnp.pad(w2d, ((0, kpad - k), (0, (-cout) % block_n)))
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, (-cout) % block_n))
+
+    spikes, u = dense_conv_lif(
+        patches, w2d, bias_p,
+        num_steps=num_steps, beta=beta, theta=theta,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    spikes = spikes[:, :m, :cout].reshape(num_steps, b, h, w, cout)
+    u = u[:m, :cout].reshape(b, h, w, cout)
+    return spikes, u
+
+
+def _round_up(x: int, multiple: int = 128) -> int:
+    return ((x + multiple - 1) // multiple) * multiple

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused dense-core conv + LIF kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_conv_lif_ref(
+    patches: jax.Array,
+    weights: jax.Array,
+    bias: jax.Array,
+    *,
+    num_steps: int,
+    beta: float,
+    theta: float,
+):
+    """Reference: conv-as-matmul once, then T explicit LIF steps (Eq. 1-2)."""
+    current = jnp.dot(patches.astype(jnp.float32), weights.astype(jnp.float32)) + bias
+    u = jnp.zeros_like(current)
+    s = jnp.zeros_like(current)
+    spikes = []
+    for _ in range(num_steps):
+        u = beta * u + current - s * theta
+        s = (u > theta).astype(current.dtype)
+        spikes.append(s)
+    return jnp.stack(spikes), u

@@ -1,0 +1,108 @@
+"""Fused causal flash-attention kernel (Pallas TPU).
+
+The §Perf decomposition shows the dominant HBM term for dense-transformer
+training is the attention score chain: an unfused [Cq, Ck] f32 score tensor
+crosses HBM ~7x per chunk (mask, max, exp, sum, two matmul operand reads,
+cast). This kernel keeps the entire online-softmax pipeline in VMEM: HBM
+traffic collapses to Q/K/V/O block streams — the flash-attention bound.
+
+Grid: (batch*kv_heads*groups, nq, nk), innermost nk sequential. The running
+max/denominator (m, l) and the output accumulator live in output refs blocked
+per (bh, i) — the same accumulate-in-output pattern as kernels/spike_conv.
+
+Causal block skipping: a kv block entirely in the future of the q block is
+skipped with @pl.when — zero MXU issue and zero VMEM traffic for ~half the
+blocks. This is the same *structural* gating the paper's sparse cores apply
+to spike events, applied to the causal mask (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, scale: float):
+    i = pl.program_id(1)
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * bq
+    k_start = kk * bk
+
+    @pl.when(k_start <= q_start + bq - 1)      # causal block skip
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale        # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[0]                                # [bq]
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        o_new = o_ref[0] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+        o_ref[0] = o_new
+
+    @pl.when(kk == nk - 1)
+    def _finish():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def flash_attention_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    block_q: int = 256, block_k: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """Causal attention. q/k/v: [BH, S, hd] (kv already broadcast to q heads).
+
+    Returns o [BH, S, hd] (f32 accumulation, cast to q.dtype).
+    """
+    bh, s, hd = q.shape
+    assert k.shape == v.shape == (bh, s, hd)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    grid = (bh, s // block_q, s // block_k)
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, bq=block_q, bk=block_k, scale=scale)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i, kk: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i, kk: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o.astype(q.dtype)

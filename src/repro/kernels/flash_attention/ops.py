@@ -1,0 +1,26 @@
+"""Jitted GQA wrapper for the fused flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """GQA causal attention: q [B,S,H,hd], k/v [B,S,KV,hd] -> [B,S,H,hd]."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # broadcast kv heads to q heads and fold (B, H) into one grid axis
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, hd)
+    o = flash_attention_fwd(qf, kf, vf, block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

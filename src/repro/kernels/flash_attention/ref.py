@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """q/k/v [BH, S, hd] -> [BH, S, hd], standard masked softmax attention."""
+    bh, s, hd = q.shape
+    scores = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w, v.astype(jnp.float32)).astype(q.dtype)

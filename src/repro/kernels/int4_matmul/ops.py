@@ -1,0 +1,48 @@
+"""Jitted public wrapper: W4A16 linear layer over a QTensor."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quant import QTensor
+from .int4_matmul import int4_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n", "interpret"))
+def w4a16_linear(
+    x: jax.Array,
+    qt: QTensor,
+    *,
+    block_m: int = 256,
+    block_k: int = 512,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x [..., K] @ int4-packed qt (logical [K, N]) -> [..., N] fp32.
+
+    Pads M/K/N to block multiples; the packed layout (2 channels/byte along N)
+    matches core.quant.pack_int4.
+    """
+    k_logical, n_logical = qt.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k_logical)
+    m = x2.shape[0]
+
+    bm = min(block_m, _round_up(m, 8))
+    bk = min(block_k, _round_up(k_logical, 128))
+    bn = min(block_n, _round_up(n_logical, 128))
+    bn += bn % 2  # packed axis needs even blocks
+
+    x2 = jnp.pad(x2, ((0, (-m) % bm), (0, (-k_logical) % bk)))
+    packed = jnp.pad(qt.packed, ((0, (-k_logical) % bk), (0, (-(n_logical // 2)) % (bn // 2))))
+    scale = jnp.broadcast_to(qt.scale.reshape(1, -1), (1, n_logical)).astype(jnp.float32)
+    scale = jnp.pad(scale, ((0, 0), (0, (-n_logical) % bn)))
+
+    out = int4_matmul(x2, packed, scale, block_m=bm, block_k=bk, block_n=bn, interpret=interpret)
+    return out[:m, :n_logical].reshape(*lead, n_logical)
+
+
+def _round_up(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the W4A16 int4 matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quant import QTensor, dequantize
+
+
+def int4_matmul_ref(x: jax.Array, qt: QTensor) -> jax.Array:
+    """Dequantize-to-fp32 then matmul — the numerical ground truth."""
+    w = dequantize(qt, jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w)

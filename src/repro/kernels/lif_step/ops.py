@@ -1,0 +1,45 @@
+"""Jitted wrapper for the fused LIF step over arbitrary-shaped tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .lif_step import lif_step_fused
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "theta", "interpret"))
+def lif_update(
+    u: jax.Array,
+    current: jax.Array,
+    prev_spike: jax.Array,
+    *,
+    beta: float = 0.15,
+    theta: float = 0.5,
+    interpret: bool = False,
+):
+    """Fused LIF update for any shape: flattens to 2D, pads to VPU tiles."""
+    shape = u.shape
+    flat = u.reshape(-1)
+    n = flat.shape[0]
+    cols = 512
+    rows = -(-n // cols)
+    block_r = min(256, ((rows + 7) // 8) * 8)
+    rows_padded = -(-rows // block_r) * block_r
+
+    def prep(x):
+        x = x.reshape(-1)
+        x = jnp.pad(x, (0, rows * cols - n))
+        x = x.reshape(rows, cols)
+        return jnp.pad(x, ((0, rows_padded - rows), (0, 0)))
+
+    u2, i2, s2 = prep(u), prep(current), prep(prev_spike)
+    u_next, s = lif_step_fused(
+        u2, i2, s2, beta=beta, theta=theta,
+        block_r=block_r, block_c=cols, interpret=interpret,
+    )
+    return (
+        u_next.reshape(-1)[:n].reshape(shape),
+        s.reshape(-1)[:n].reshape(shape),
+    )

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused LIF step — delegates to core.lif."""
+from __future__ import annotations
+
+import jax
+
+from ...core.lif import LIFParams, lif_step
+
+
+def lif_step_ref(u: jax.Array, current: jax.Array, prev_spike: jax.Array, *, beta: float, theta: float):
+    p = LIFParams(beta=beta, theta=theta)
+    return lif_step(u, current, prev_spike, p)

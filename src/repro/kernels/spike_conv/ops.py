@@ -1,0 +1,65 @@
+"""Jitted public wrapper for the occupancy-gated spiking convolution."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import im2col
+from .spike_conv import spike_matmul
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("padding", "block_m", "block_k", "block_n", "gate", "interpret"),
+)
+def spike_conv2d(
+    spikes: jax.Array,
+    weights: jax.Array,
+    *,
+    padding: str = "SAME",
+    block_m: int = 256,
+    block_k: int = 128,
+    block_n: int = 128,
+    gate: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Event-driven spiking conv: [B,H,W,Cin] x [KH,KW,Cin,Cout] -> [B,H,W,Cout].
+
+    Inference-path kernel (forward only). The training path uses the XLA
+    convolution with identical numerics (see ref.conv_ref).
+    """
+    b, h, w, cin = spikes.shape
+    kh, kw, _, cout = weights.shape
+    patches = im2col(spikes, kh, kw, padding)            # [M, K]
+    w2d = weights.reshape(kh * kw * cin, cout)           # [K, N]
+
+    m, k = patches.shape
+    block_m = min(block_m, _round_up(m))
+    block_k = min(block_k, _round_up(k))
+    block_n = min(block_n, _round_up(cout))
+    patches = _pad_to(_pad_to(patches, 0, block_m), 1, block_k)
+    w2d = _pad_to(_pad_to(w2d, 0, block_k), 1, block_n)
+
+    out = spike_matmul(
+        patches, w2d,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        gate=gate, interpret=interpret,
+    )
+    out = out[:m, :cout]
+    oh, ow = (h, w) if padding == "SAME" else (h - kh + 1, w - kw + 1)
+    return out.reshape(b, oh, ow, cout)
+
+
+def _round_up(x: int, multiple: int = 128) -> int:
+    return ((x + multiple - 1) // multiple) * multiple

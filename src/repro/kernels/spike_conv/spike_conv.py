@@ -1,0 +1,87 @@
+"""Occupancy-gated spiking convolution kernel (sparse core, paper §IV-B).
+
+TPU adaptation of the paper's event-driven sparse core: instead of a priority
+encoder popping one spike per cycle, spikes stay binary inside dense
+(block_m x block_k) VMEM tiles and the kernel *skips the MXU dot for any tile
+containing zero spikes* (`@pl.when`). Event granularity 1 -> tile granularity,
+which is the skip granularity the TPU memory/compute hierarchy can exploit.
+
+The convolution itself is expressed as an im2col matmul (done by ops.py):
+    patches [M, K] @ weights [K, N] -> currents [M, N]
+with M = B*H_out*W_out, K = KH*KW*C_in, N = C_out. Because spike activations
+are binary, the dot is effectively a masked column-sum of the weights; the
+MXU executes it as a matmul, and zero tiles are skipped entirely.
+
+Accumulation is fp32 in-place in the output block across the K grid dimension
+(k is the innermost, sequential grid axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _spike_matmul_kernel(x_ref, w_ref, o_ref, *, gate: bool):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j], gated on occupancy."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+
+    def _accumulate():
+        o_ref[...] += jnp.dot(
+            x, w_ref[...], preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+    if gate:
+        # Tile-level occupancy gate: the block-granular analogue of the
+        # paper's per-event skipping. On TPU this saves the MXU issue and
+        # the partial-sum write for all-zero spike tiles.
+        has_spike = jnp.any(x != 0)
+        pl.when(has_spike)(_accumulate)
+    else:
+        _accumulate()
+
+
+def spike_matmul(
+    patches: jax.Array,
+    weights: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    gate: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """patches [M, K] (binary spikes) @ weights [K, N] -> [M, N] fp32.
+
+    M, K, N must be multiples of the block sizes (ops.py pads).
+    """
+    m, k = patches.shape
+    k2, n = weights.shape
+    assert k == k2, (patches.shape, weights.shape)
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_spike_matmul_kernel, gate=gate),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(patches, weights)

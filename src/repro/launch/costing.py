@@ -1,0 +1,395 @@
+"""Roofline cost accounting from compiled dry-run artifacts.
+
+XLA's HLO cost analysis counts while-loop (lax.scan) bodies ONCE, so the cost
+of a depth-P scanned model is undercounted by ~P. Methodology
+(EXPERIMENTS.md §Methodology): lower *pieces* whose HLO contains no hidden
+trip counts and compose
+
+    total = stem + n_periods * period + sum(tail blocks) + slstm corrections
+
+Each piece is jit-lowered with the production shardings (GSPMD partitions
+it), so FLOPs / HBM bytes / collective bytes are per-chip quantities of the
+real partitioned program. The chunked attention / mLSTM scans inside a piece
+are unrolled (cfg.unroll_chunks) so every chunk is visible to cost analysis.
+
+Collective bytes are parsed from the partitioned HLO text: per-op wire bytes
+use ring-algorithm factors ((g-1)/g, 2x for all-reduce) with the group size
+taken from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..dist import sharding as shd
+from ..models import transformer as tf
+from ..models import xlstm as xl
+from ..train.optim import apply_updates, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5}
+
+# collectives can return TUPLE shapes: `%x = (f32[a,b], f32[c,d]) all-reduce(...)`
+_COLL_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}()\s/]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo: str, world: int) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind (ring factors applied)."""
+    out: Dict[str, float] = {}
+    for line in hlo.splitlines():
+        m = _COLL_OP_RE.search(line)
+        if not m:
+            continue
+        shapes, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue                       # counted at the -start op
+        size = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shapes))
+        if size == 0:
+            continue
+        g = world
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))           # [n_groups, group_size]
+        else:
+            gb = _GROUPS_BRACES_RE.search(line)
+            if gb:
+                g = len([t for t in gb.group(1).split(",") if t.strip()])
+        g = max(g, 1)
+        if kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif kind == "all-gather":
+            wire = size * (g - 1) / g      # size = gathered output
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)          # size = scattered output
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:                               # collective-permute
+            wire = size
+        out[kind] = out.get(kind, 0.0) + wire
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def compiled_costs(lowered, compiled, world: int) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = parse_collective_bytes(compiled.as_text(), world)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": coll["total"],
+        "coll_detail": {k: v for k, v in coll.items() if k != "total"},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cost pieces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Piece:
+    name: str
+    fn: Callable
+    arg_specs: Tuple
+    in_shardings: Tuple
+    mult: float
+
+
+def _sh(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cost_cfg(cfg: ArchConfig, shape: ShapeConfig) -> ArchConfig:
+    s = shape.seq_len
+    return cfg.with_(unroll_chunks=True,
+                     q_chunk=min(4096, s), kv_chunk=min(4096, s))
+
+
+def _single_period_shapes(cfg: ArchConfig):
+    """Per-period (unstacked) block param shapes."""
+    def build():
+        key = jax.random.PRNGKey(0)
+        return {f"slot{si}": tf.init_block(key, cfg, kind)
+                for si, kind in enumerate(cfg.pattern)}
+    return jax.eval_shape(build)
+
+
+def _x_spec(cfg: ArchConfig, shape: ShapeConfig, decode: bool):
+    b = shape.global_batch
+    s = 1 if decode else shape.seq_len
+    return jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def _x_part(mesh, batch: int = 0):
+    dp = shd.dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    if batch and batch % ndp != 0:
+        return P()
+    return P(dp, None, None)
+
+
+def train_pieces(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> List[Piece]:
+    ccfg = _cost_cfg(cfg, shape)
+    opt = make_optimizer(cfg.optimizer)
+    pieces = []
+
+    # --- stem: embed + final norm + unembed + CE + stem param update ---
+    stem_shapes = jax.eval_shape(lambda: {
+        k: v for k, v in tf.init_params(jax.random.PRNGKey(0),
+                                        cfg.with_(n_layers=len(cfg.pattern), tail=())).items()
+        if k in ("embed", "final_norm", "lm_head")})
+    stem_opt_shapes = jax.eval_shape(opt.init, stem_shapes)
+    from .specs import batch_shapes as _bs
+    b_specs = _bs(cfg, dataclasses.replace(shape, kind="train"))
+    if "labels" not in b_specs:
+        s_tok = b_specs["tokens"].shape[1]
+        b_specs = dict(b_specs)
+        b_specs["labels"] = jax.ShapeDtypeStruct((shape.global_batch, s_tok), jnp.int32)
+
+    def stem_fn(sp, so, batch):
+        def loss(sp):
+            from ..models.layers import rmsnorm
+            x = tf._embed(sp, batch, cfg)
+            x = rmsnorm(x, sp["final_norm"], cfg.norm_eps)
+            logits = tf._unembed(sp, x, cfg).astype(jnp.float32)
+            labels = batch["labels"]
+            if cfg.frontend:
+                logits = logits[:, cfg.n_frontend_tokens:]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            return jnp.mean(logz - gold)
+        l, g = jax.value_and_grad(loss)(sp)
+        if cfg.grad_dtype:
+            g = jax.tree.map(lambda x_: x_.astype(cfg.grad_dtype), g)
+        upd, so2 = opt.update(g, so, sp, 1e-3)
+        return apply_updates(sp, upd), so2, l
+
+    sp_part = shd.param_specs(stem_shapes, mesh)
+    so_part = shd.zero1_opt_specs(stem_opt_shapes, sp_part, mesh)
+    b_part = shd.batch_spec(b_specs, mesh)
+    pieces.append(Piece("stem", stem_fn, (stem_shapes, stem_opt_shapes, b_specs),
+                        (_sh(mesh, sp_part), _sh(mesh, so_part), _sh(mesh, b_part)), 1.0))
+
+    # --- one period: fwd + vjp + param update ---
+    pp_shapes = _single_period_shapes(cfg)
+    pp_opt_shapes = jax.eval_shape(opt.init, pp_shapes)
+    x_spec = _x_spec(cfg, shape, decode=False)
+
+    def period_apply(pp, x):
+        aux = jnp.zeros((), jnp.float32)
+        for si, kind in enumerate(ccfg.pattern):
+            x, a = tf._apply_block(kind, pp[f"slot{si}"], x, ccfg)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat == "full":
+        period_apply = jax.checkpoint(period_apply)
+
+    def period_fn(pp, po, x):
+        (y, aux), vjp = jax.vjp(period_apply, pp, x)
+        dpp, dx = vjp((jnp.ones_like(y), jnp.ones_like(aux)))
+        if cfg.grad_dtype:
+            dpp = jax.tree.map(lambda g: g.astype(cfg.grad_dtype), dpp)
+        upd, po2 = opt.update(dpp, po, pp, 1e-3)
+        return apply_updates(pp, upd), po2, dx
+
+    pp_part = shd.param_specs(pp_shapes, mesh, cfg.fsdp_experts)
+    po_part = shd.zero1_opt_specs(pp_opt_shapes, pp_part, mesh)
+    pieces.append(Piece("period", period_fn, (pp_shapes, pp_opt_shapes, x_spec),
+                        (_sh(mesh, pp_part), _sh(mesh, po_part),
+                         NamedSharding(mesh, _x_part(mesh, shape.global_batch))), float(cfg.n_periods)))
+
+    # --- tail blocks ---
+    for ti, kind in enumerate(cfg.tail):
+        t_shapes = jax.eval_shape(
+            lambda kd=kind: tf.init_block(jax.random.PRNGKey(0), cfg, kd))
+        t_opt = jax.eval_shape(opt.init, t_shapes)
+
+        def tail_fn(tp, to, x, kd=kind):
+            def f(tp, x):
+                return tf._apply_block(kd, tp, x, ccfg)
+            (y, aux), vjp = jax.vjp(f, tp, x)
+            dtp, dx = vjp((jnp.ones_like(y), jnp.ones_like(aux)))
+            upd, to2 = opt.update(dtp, to, tp, 1e-3)
+            return apply_updates(tp, upd), to2, dx
+
+        t_part = shd.param_specs(t_shapes, mesh)
+        to_part = shd.zero1_opt_specs(t_opt, t_part, mesh)
+        pieces.append(Piece(f"tail{ti}_{kind}", tail_fn, (t_shapes, t_opt, x_spec),
+                            (_sh(mesh, t_part), _sh(mesh, to_part),
+                             NamedSharding(mesh, _x_part(mesh, shape.global_batch))), 1.0))
+
+    pieces.extend(_slstm_correction(cfg, shape, mesh, train=True))
+    return pieces
+
+
+def serve_pieces(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                 decode: bool) -> List[Piece]:
+    ccfg = _cost_cfg(cfg, shape)
+    pieces = []
+    x_spec = _x_spec(cfg, shape, decode)
+    from .specs import batch_shapes as _bs
+    b_specs = _bs(cfg, shape)
+
+    # stem: embed + final norm + unembed
+    stem_shapes = jax.eval_shape(lambda: {
+        k: v for k, v in tf.init_params(jax.random.PRNGKey(0),
+                                        cfg.with_(n_layers=len(cfg.pattern), tail=())).items()
+        if k in ("embed", "final_norm", "lm_head")})
+
+    def stem_fn(sp, batch):
+        x = tf._embed(sp, batch, cfg) if not decode else sp["embed"]["w_tok"][batch["tokens"]]
+        from ..models.layers import rmsnorm
+        x = rmsnorm(x, sp["final_norm"], cfg.norm_eps)
+        return tf._unembed(sp, x, cfg)
+
+    sp_part = shd.param_specs(stem_shapes, mesh)
+    b_part = shd.batch_spec(b_specs, mesh)
+    pieces.append(Piece("stem", stem_fn, (stem_shapes, b_specs),
+                        (_sh(mesh, sp_part), _sh(mesh, b_part)), 1.0))
+
+    pp_shapes = _single_period_shapes(cfg)
+    pp_part = shd.param_specs(pp_shapes, mesh, cfg.fsdp_experts)
+
+    if decode:
+        cache_one = jax.eval_shape(lambda: {
+            f"slot{si}": tf._init_block_cache(kind, cfg, shape.global_batch,
+                                              shape.seq_len, jnp.dtype(cfg.dtype))
+            for si, kind in enumerate(cfg.pattern)})
+        cache_part = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: shd.cache_spec(path, leaf, mesh), cache_one)
+
+        def period_fn(pp, cache, x):
+            new_cache = {}
+            for si, kind in enumerate(ccfg.pattern):
+                x, c = tf._decode_block(kind, pp[f"slot{si}"], x,
+                                        cache[f"slot{si}"], jnp.int32(shape.seq_len - 1), ccfg)
+                new_cache[f"slot{si}"] = c
+            return x, new_cache
+
+        pieces.append(Piece("period", period_fn, (pp_shapes, cache_one, x_spec),
+                            (_sh(mesh, pp_part), _sh(mesh, cache_part),
+                             NamedSharding(mesh, _x_part(mesh, shape.global_batch))), float(cfg.n_periods)))
+    else:
+        def period_fn(pp, x):
+            for si, kind in enumerate(ccfg.pattern):
+                x, _ = tf._apply_block(kind, pp[f"slot{si}"], x, ccfg)
+            return x
+
+        pieces.append(Piece("period", period_fn, (pp_shapes, x_spec),
+                            (_sh(mesh, pp_part), NamedSharding(mesh, _x_part(mesh, shape.global_batch))),
+                            float(cfg.n_periods)))
+
+    for ti, kind in enumerate(cfg.tail):
+        t_shapes = jax.eval_shape(
+            lambda kd=kind: tf.init_block(jax.random.PRNGKey(0), cfg, kd))
+        t_part = shd.param_specs(t_shapes, mesh)
+        if decode:
+            tc = jax.eval_shape(lambda kd=kind: tf._init_block_cache(
+                kd, cfg, shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype)))
+            tc_part = jax.tree_util.tree_map_with_path(
+                lambda path, leaf: shd.cache_spec(path, leaf, mesh), tc)
+
+            def tail_fn(tp, cache, x, kd=kind):
+                return tf._decode_block(kd, tp, x, cache, jnp.int32(shape.seq_len - 1), ccfg)
+
+            pieces.append(Piece(f"tail{ti}_{kind}", tail_fn, (t_shapes, tc, x_spec),
+                                (_sh(mesh, t_part), _sh(mesh, tc_part),
+                                 NamedSharding(mesh, _x_part(mesh, shape.global_batch))), 1.0))
+        else:
+            def tail_fn(tp, x, kd=kind):
+                y, _ = tf._apply_block(kd, tp, x, ccfg)
+                return y
+
+            pieces.append(Piece(f"tail{ti}_{kind}", tail_fn, (t_shapes, x_spec),
+                                (_sh(mesh, t_part), NamedSharding(mesh, _x_part(mesh, shape.global_batch))), 1.0))
+
+    if not decode:
+        pieces.extend(_slstm_correction(cfg, shape, mesh, train=False))
+    return pieces
+
+
+def _slstm_correction(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                      train: bool) -> List[Piece]:
+    """(S-1) extra sLSTM steps per slstm layer (scan body counted once)."""
+    n_slstm = sum(1 for k in cfg.pattern if k == "slstm") * cfg.n_periods \
+        + sum(1 for k in cfg.tail if k == "slstm")
+    if n_slstm == 0 or shape.kind == "decode":
+        return []
+    b, d = shape.global_batch, cfg.d_model
+    p_shapes = jax.eval_shape(
+        lambda: xl.slstm_init(jax.random.PRNGKey(0), d, cfg.n_heads, jnp.dtype(cfg.dtype)))
+    carry = tuple(jax.ShapeDtypeStruct((b, d), jnp.float32) for _ in range(4))
+    wx = jax.ShapeDtypeStruct((b, 4 * d), jnp.float32)
+
+    def step_fn(p, carry, wx):
+        if train:
+            # differentiate carry/wx only: the real scan accumulates param
+            # grads locally and all-reduces ONCE at the end, not per step
+            def f(carry, wx):
+                c, h = xl._slstm_step(p, cfg.n_heads, carry, wx)
+                return h
+            y, vjp = jax.vjp(f, carry, wx)
+            return vjp(jnp.ones_like(y))
+        return xl._slstm_step(p, cfg.n_heads, carry, wx)
+
+    p_part = shd.param_specs(p_shapes, mesh, cfg.fsdp_experts)
+    xp = _x_part(mesh, shape.global_batch)
+    dp = xp[0] if len(xp) else None
+    carry_part = tuple(P(dp, None) for _ in range(4))
+    mult = float(n_slstm * (shape.seq_len - 1))
+    return [Piece("slstm_step", step_fn, (p_shapes, carry, wx),
+                  (_sh(mesh, p_part), _sh(mesh, carry_part),
+                   NamedSharding(mesh, P(dp, None))), mult)]
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+def measure_pieces(pieces: List[Piece], mesh: Mesh) -> Dict[str, Any]:
+    from ..dist.context import compute_mesh
+    world = mesh.size
+    per_piece = {}
+    totals = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+    with mesh, compute_mesh(mesh):
+        for pc in pieces:
+            lowered = jax.jit(pc.fn, in_shardings=pc.in_shardings).lower(*pc.arg_specs)
+            compiled = lowered.compile()
+            costs = compiled_costs(lowered, compiled, world)
+            costs["mult"] = pc.mult
+            per_piece[pc.name] = costs
+            for k in totals:
+                totals[k] += costs[k] * pc.mult
+    return {"pieces": per_piece, "totals": totals}

@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. jit-lowers the real step function (train_step / prefill_step /
+     decode_step) with production shardings and ShapeDtypeStruct inputs
+     (no parameter allocation — jax.eval_shape),
+  3. compiles it (proves the distribution config is coherent: shardings
+     consistent, collectives lowerable, memory analyzable),
+  4. prints memory_analysis() and cost_analysis(),
+  5. lowers the cost *pieces* (launch/costing.py) and composes the roofline
+     terms (compute / memory / collective), written to results/dryrun/*.json.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-34b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "results/dryrun", skip_pieces: bool = False,
+             variant: str = "") -> dict:
+    from ..configs import SHAPES, get_arch, shape_applicable
+    from ..core.energy import roofline
+    from . import costing, specs
+    from .mesh import make_production_mesh
+
+    cfg = get_arch(arch_name)
+    if variant:
+        cfg = apply_variant(cfg, variant)
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod" if multi_pod else "pod"
+    tag = f"{arch_name}_{shape_name}_{mesh_name}" + (f"_{variant}" if variant else "")
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+        _write(out_dir, tag, rec)
+        print(f"[{tag}] SKIPPED: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step_fn, state_specs, b_specs, state_sh, b_sh = specs.make_train_objects(cfg, shape, mesh)
+        jitted = jax.jit(step_fn, in_shardings=(state_sh, b_sh), donate_argnums=(0,))
+        args = (state_specs, b_specs)
+        pieces = None if skip_pieces else costing.train_pieces(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        step_fn, args, shs = specs.make_prefill_objects(cfg, shape, mesh)
+        jitted = jax.jit(step_fn, in_shardings=shs)
+        pieces = None if skip_pieces else costing.serve_pieces(cfg, shape, mesh, decode=False)
+    else:  # decode
+        step_fn, args, shs = specs.make_decode_objects(cfg, shape, mesh)
+        jitted = jax.jit(step_fn, in_shardings=shs, donate_argnums=(1,))
+        pieces = None if skip_pieces else costing.serve_pieces(cfg, shape, mesh, decode=True)
+
+    from ..dist.context import compute_mesh
+    with mesh, compute_mesh(mesh):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    raw = costing.compiled_costs(lowered, compiled, chips)
+    compile_s = time.time() - t0
+
+    rec = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant or "baseline",
+        "status": "ok", "kind": shape.kind, "chips": chips,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes_per_chip": mem.argument_size_in_bytes,
+            "output_bytes_per_chip": mem.output_size_in_bytes,
+            "temp_bytes_per_chip": mem.temp_size_in_bytes,
+            "alias_bytes_per_chip": mem.alias_size_in_bytes,
+            "peak_estimate_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        },
+        "hlo_raw": raw,  # scan bodies counted once — see §Methodology
+    }
+
+    if pieces is not None:
+        t1 = time.time()
+        cost = costing.measure_pieces(pieces, mesh)
+        rec["pieces"] = cost["pieces"]
+        rec["totals"] = cost["totals"]
+        rec["pieces_s"] = round(time.time() - t1, 1)
+        terms = roofline(cost["totals"]["flops"], cost["totals"]["bytes"],
+                         cost["totals"]["coll_bytes"], 1)  # piece costs are per-chip
+        rec["roofline"] = terms.as_dict()
+
+        total, active = specs.count_params(cfg)
+        tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+        factor = 6 if shape.kind == "train" else 2
+        model_flops = factor * active * tokens
+        rec["model_flops"] = model_flops
+        rec["params_total"] = total
+        rec["params_active"] = active
+        # per-chip HLO flops * chips vs global model flops
+        hlo_global = cost["totals"]["flops"] * chips
+        rec["useful_flops_ratio"] = round(model_flops / hlo_global, 4) if hlo_global else None
+
+    _write(out_dir, tag, rec)
+    print(f"[{tag}] OK compile={compile_s:.0f}s "
+          f"mem/chip={rec['memory']['peak_estimate_gib']}GiB "
+          + (f"dominant={rec['roofline']['dominant']}" if "roofline" in rec else ""))
+    print(f"  memory_analysis: {mem}")
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e}")
+    return rec
+
+
+def apply_variant(cfg, variant: str):
+    """Named optimization variants for the §Perf hillclimb (EXPERIMENTS.md)."""
+    if variant == "baseline":
+        return cfg
+    mods = {}
+    for kv in variant.split(","):
+        k, _, v = kv.partition("=")
+        mods[k] = v
+    out = cfg
+    if "remat" in mods:
+        out = out.with_(remat=mods["remat"])
+    if "qc" in mods:
+        out = out.with_(q_chunk=int(mods["qc"]))
+    if "kc" in mods:
+        out = out.with_(kv_chunk=int(mods["kc"]))
+    if "dtype" in mods:
+        out = out.with_(dtype=mods["dtype"])
+    if "attnf32" in mods:
+        out = out.with_(attn_f32_streams=mods["attnf32"] == "1")
+    if "cf" in mods:
+        out = out.with_(capacity_factor=float(mods["cf"]))
+    if "graddt" in mods:
+        out = out.with_(grad_dtype=mods["graddt"])
+    if "spblocks" in mods:
+        out = out.with_(sp_blocks=mods["spblocks"] == "1")
+    return out
+
+
+def _write(out_dir: str, tag: str, rec: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-pieces", action="store_true",
+                    help="compile-only (no roofline pieces)")
+    ap.add_argument("--variant", default="", help="perf variant, e.g. remat=none,qc=1024")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON already reports status=ok")
+    args = ap.parse_args()
+
+    from ..configs import SHAPES, all_archs
+
+    archs = list(all_archs()) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multipod"]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.skip_existing:
+                    tag = f"{arch}_{shape}_{'multipod' if mp else 'pod'}"
+                    pth = os.path.join(args.out, f"{tag}.json")
+                    if os.path.exists(pth):
+                        try:
+                            with open(pth) as f:
+                                if json.load(f).get("status") in ("ok", "skipped"):
+                                    continue
+                        except Exception:
+                            pass
+                try:
+                    run_cell(arch, shape, mp, args.out, args.skip_pieces, args.variant)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+                    _write(args.out,
+                           f"{arch}_{shape}_{'multipod' if mp else 'pod'}",
+                           {"arch": arch, "shape": shape,
+                            "mesh": "multipod" if mp else "pod",
+                            "status": "failed", "error": repr(e)})
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serving driver: batched greedy generation with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import get_arch
+from ..models import transformer as tf
+from ..serve.engine import ServeEngine
+from .train import reduce_cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--int4", action="store_true", help="int4-weight numerics")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    cfg = reduce_cfg(cfg, args).with_(frontend="", n_frontend_tokens=0)
+    params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServeEngine(cfg, params, batch_slots=4, max_seq=args.seq,
+                         quant_bits=4 if args.int4 else 0)
+    prompts = [[1, 2, 3], [7, 8], [11], [4, 4, 4]]
+    out = engine.generate(prompts, args.tokens)
+    for i, o in enumerate(out):
+        print(f"req{i}: prompt={prompts[i]} -> {o[len(prompts[i]):]}")
+
+
+if __name__ == "__main__":
+    main()

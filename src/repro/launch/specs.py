@@ -1,0 +1,120 @@
+"""Input/state ShapeDtypeStruct builders for the dry-run (no allocation).
+
+Everything is built with jax.eval_shape so 34B-400B parameter trees never
+materialize; shardings come from dist.sharding rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..dist import sharding as shd
+from ..models import transformer as tf
+from ..train.optim import make_optimizer
+from ..train.schedule import warmup_cosine
+from ..train.train_step import make_train_step
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    else:
+        s_tok = shape.seq_len - (cfg.n_frontend_tokens if cfg.frontend else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        if cfg.frontend:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_frontend), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def count_params(cfg: ArchConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts; active discounts unrouted experts."""
+    shapes = param_shapes(cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0
+    for path, leaf in leaves:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        key = jax.tree_util.keystr(path)
+        if "experts" in key and cfg.n_experts:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def make_train_objects(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """(step_fn, state_specs, batch_specs, state_shardings, batch_shardings)."""
+    opt = make_optimizer(cfg.optimizer)
+    lr_fn = warmup_cosine(3e-4, 200, 10_000)
+    loss_fn = functools.partial(tf.train_loss, cfg=cfg)
+
+    p_shapes = param_shapes(cfg)
+    opt_shapes = jax.eval_shape(opt.init, p_shapes)
+    state_specs = {"params": p_shapes, "opt": opt_shapes,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    b_specs = batch_shapes(cfg, shape)
+
+    p_part = shd.param_specs(p_shapes, mesh, cfg.fsdp_experts)
+    grad_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_part,
+                           is_leaf=lambda x: isinstance(x, P))
+    step_fn = make_train_step(lambda p, b: loss_fn(p, b), opt, lr_fn,
+                              grad_shardings=grad_sh, grad_dtype=cfg.grad_dtype)
+    opt_part = shd.zero1_opt_specs(opt_shapes, p_part, mesh)
+    state_part = {"params": p_part, "opt": opt_part, "step": P()}
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_part,
+                            is_leaf=lambda x: isinstance(x, P))
+    b_part = shd.batch_spec(b_specs, mesh)
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), b_part,
+                        is_leaf=lambda x: isinstance(x, P))
+    return step_fn, state_specs, b_specs, state_sh, b_sh
+
+
+def make_decode_objects(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    p_shapes = param_shapes(cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len))
+    b_specs = batch_shapes(cfg, shape)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), shd.param_specs(p_shapes, mesh, cfg.fsdp_experts),
+                        is_leaf=lambda x: isinstance(x, P))
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            shd.cache_specs(cache_shapes, mesh),
+                            is_leaf=lambda x: isinstance(x, P))
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), shd.batch_spec(b_specs, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+    def step_fn(params, cache, batch, pos):
+        return tf.decode_step(params, cache, batch, pos, cfg)
+
+    return (step_fn, (p_shapes, cache_shapes, b_specs, pos_spec),
+            (p_sh, cache_sh, b_sh, NamedSharding(mesh, P())))
+
+
+def make_prefill_objects(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    p_shapes = param_shapes(cfg)
+    b_specs = batch_shapes(cfg, shape)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), shd.param_specs(p_shapes, mesh, cfg.fsdp_experts),
+                        is_leaf=lambda x: isinstance(x, P))
+    b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), shd.batch_spec(b_specs, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+    def step_fn(params, batch):
+        return tf.prefill_step(params, batch, cfg)
+
+    return step_fn, (p_shapes, b_specs), (p_sh, b_sh)

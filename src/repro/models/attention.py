@@ -1,0 +1,212 @@
+"""GQA attention: chunked (flash-style) training/prefill path + KV-cache decode.
+
+Memory-efficient attention in pure JAX: lax.scan over query chunks with an
+online-softmax accumulator over KV chunks, so peak activation memory is
+O(S * chunk) instead of O(S^2) — required for the 32k prefill shapes to
+produce an honest memory analysis. Supports GQA (grouped KV heads), RoPE,
+optional QKV bias (qwen1.5), and sliding-window masks (recurrentgemma local
+attention).
+
+Sequence positions are assumed left-aligned and shared across the batch
+(positions derived from iota; no padding mask), the standard training/serving
+layout in this framework.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (chunk-size selection)."""
+    cap = min(cap, n)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def attn_init(key, d: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              qkv_bias: bool, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rope_theta, positions):
+    b, s, _ = x.shape
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, window: int = 0, q_chunk: int = 512, kv_chunk: int = 1024,
+    unroll: bool = False, f32_streams: bool = False,
+) -> jax.Array:
+    """Online-softmax causal attention. q [B,S,H,hd], k/v [B,S,KV,hd].
+
+    window > 0 restricts attention to the last `window` positions
+    (sliding-window / local attention). S must divide by the chunk sizes
+    (callers pad); chunks are clamped to S.
+
+    unroll=True replaces the chunk scans with Python loops — used by the
+    dry-run cost lowering so HLO cost_analysis sees every chunk (scan bodies
+    are counted once by XLA; see EXPERIMENTS.md §Methodology).
+    """
+    b, s, h, hd = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    q_chunk = _largest_divisor_leq(s, q_chunk)
+    kv_chunk = _largest_divisor_leq(s, kv_chunk)
+    nq, nk = s // q_chunk, s // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    # keep q/k/v streams in their native dtype (bf16 on TPU): the MXU takes
+    # bf16 operands with f32 accumulation (preferred_element_type below), and
+    # HBM traffic for the chunk streams halves vs upcasting here.
+    # f32_streams=True reproduces the pre-optimization baseline (§Perf).
+    sdt = jnp.float32 if f32_streams else q.dtype
+    qr = (q.astype(jnp.float32) * scale).astype(sdt).reshape(
+        b, nq, q_chunk, kv_heads, g, hd)
+    kr = k.astype(sdt).reshape(b, nk, kv_chunk, kv_heads, hd)
+    vr = v.astype(sdt).reshape(b, nk, kv_chunk, kv_heads, hd)
+    # [nq, B, C, KV, G, hd] etc. so scan walks the chunk axis
+    qr = jnp.moveaxis(qr, 1, 0)
+    kr = jnp.moveaxis(kr, 1, 0)
+    vr = jnp.moveaxis(vr, 1, 0)
+
+    def q_body(_, q_in):
+        qi, qc = q_in                              # index, [B, C, KV, G, hd]
+
+        @jax.checkpoint
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            ki, kc, vc = kv_in
+            qpos = qi * q_chunk + jax.lax.broadcasted_iota(jnp.int32, (q_chunk, kv_chunk), 0)
+            kpos = ki * kv_chunk + jax.lax.broadcasted_iota(jnp.int32, (q_chunk, kv_chunk), 1)
+            mask = kpos <= qpos
+            if window > 0:
+                mask &= kpos > qpos - window
+            # scores: [B, KV, G, Cq, Ck] — f32 accumulation off bf16 operands
+            sc = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc,
+                            preferred_element_type=jnp.float32)
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            # p in the value dtype for the PV matmul (standard flash practice;
+            # exact for f32 models, halves the score read for bf16 models)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv_heads, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv_heads, g, q_chunk, hd), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                carry, _ = kv_body(carry, (jnp.asarray(ki), kr[ki], vr[ki]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_body, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B, KV, G, Cq, hd]
+        return None, jnp.moveaxis(out, 3, 1)           # [B, Cq, KV, G, hd]
+
+    if unroll:
+        chunks = jnp.stack([q_body(None, (jnp.asarray(qi), qr[qi]))[1] for qi in range(nq)])
+    else:
+        _, chunks = jax.lax.scan(q_body, None, (jnp.arange(nq), qr))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, s, h, hd)  # [B, S, H, hd]
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    p: Dict[str, jax.Array], x: jax.Array, *,
+    n_heads: int, n_kv_heads: int, head_dim: int,
+    rope_theta: float, window: int = 0,
+    q_chunk: int = 512, kv_chunk: int = 1024, unroll: bool = False,
+    f32_streams: bool = False,
+) -> jax.Array:
+    """Full training/prefill attention over [B, S, d] (pre-normed input)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rope_theta, positions)
+    out = chunked_causal_attention(q, k, v, window=window, q_chunk=q_chunk,
+                                   kv_chunk=kv_chunk, unroll=unroll,
+                                   f32_streams=f32_streams)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+    }
+
+
+def attention_decode(
+    p: Dict[str, jax.Array], x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array, *,
+    n_heads: int, n_kv_heads: int, head_dim: int, rope_theta: float, window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, 1, d] new-token activations; pos: scalar int32 current position.
+
+    For window > 0 the cache is a ring buffer of size `window` (cache slot =
+    pos % window); otherwise the cache covers max_seq positions.
+    """
+    b = x.shape[0]
+    max_s = cache["k"].shape[1]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rope_theta, positions)
+
+    slot = jnp.where(window > 0, pos % max_s, pos) if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    g = n_heads // n_kv_heads
+    qh = q.reshape(b, n_kv_heads, g, head_dim).astype(jnp.float32) / math.sqrt(head_dim)
+    sc = jnp.einsum("bkgh,bskh->bkgs", qh, ck.astype(jnp.float32))  # [B,KV,G,S]
+    idx = jnp.arange(max_s)
+    if window > 0:
+        # ring buffer: slot i holds absolute position derived from pos
+        abs_pos = jnp.where(idx <= pos % max_s, pos - (pos % max_s) + idx,
+                            pos - (pos % max_s) - max_s + idx)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - max_s)
+    else:
+        valid = idx <= pos
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,26 @@
+"""Stub modality frontends (per assignment: backbone only, frontend = STUB).
+
+The audio (EnCodec) and vision (CLIP) encoders are external to the assigned
+backbones; `input_specs()` provides precomputed frame/patch embeddings. These
+helpers generate matching ShapeDtypeStructs (dry-run) and synthetic arrays
+(smoke tests). The backbone projects them with `embed.w_front`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+def frontend_spec(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    """ShapeDtypeStruct for the precomputed frontend embeddings."""
+    if not cfg.frontend:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.n_frontend_tokens, cfg.d_frontend), dtype)
+
+
+def synth_frontend(key, cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    if not cfg.frontend:
+        return None
+    return jax.random.normal(key, (batch, cfg.n_frontend_tokens, cfg.d_frontend), dtype) * 0.02

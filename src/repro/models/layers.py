@@ -1,0 +1,87 @@
+"""Common model layers: norms, embeddings, RoPE, MLPs, initializers."""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take explicit keys; usable under jax.eval_shape)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)  # scale stored as (1 + s)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (int). Rotates pairs (even, odd)."""
+    b, s, h, hd = x.shape
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(b, s, h, hd)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (swiglu / gelu / relu2) — weights use 'w*' prefixes so QAT sees them
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, d_ff, dtype), "w_out": dense_init(ks[1], d_ff, d, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    h = x @ p["w_in"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return h @ p["w_out"]

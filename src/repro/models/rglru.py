@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The RG-LRU is a gated leaky integrator:
+
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = a ** (c * r_t)         (a = sigmoid(Lambda), c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+i.e. the paper's LIF Eq. 1 without threshold/reset (DESIGN.md §4) — the same
+leaky-integration machinery, here with learned per-channel, per-step decay.
+
+Training/prefill uses `jax.lax.associative_scan` (parallel prefix scan over
+(a, b) pairs) — the TPU-parallel form; decode is the O(1) recurrent update.
+The block follows Griffin: two branches (conv1d -> RG-LRU) x (linear ->
+GeLU), multiplied, then projected back to d_model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0
+_MIN_LOG = -11.0  # Lambda init so a ~ [0.9, 0.999]
+
+
+def rglru_init(key, d: int, d_rnn: int, conv_width: int, dtype) -> Dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], d, d_rnn, dtype),          # recurrent branch in-proj
+        "w_y": dense_init(ks[1], d, d_rnn, dtype),          # gate branch in-proj
+        "w_out": dense_init(ks[2], d_rnn, d, dtype),
+        "w_conv": (jax.random.normal(ks[3], (conv_width, d_rnn), jnp.float32) * 0.02).astype(dtype),
+        "w_a": dense_init(ks[4], d_rnn, d_rnn, dtype),      # recurrence gate
+        "w_i": dense_init(ks[5], d_rnn, d_rnn, dtype),      # input gate
+        "lam": (jnp.linspace(0.9, 0.999, d_rnn)).astype(jnp.float32),  # a = sigmoid-free direct decay
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [B, S, C], w [W, C] depthwise causal conv."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def _gates(p: Dict, u: jax.Array):
+    r = jax.nn.sigmoid(u @ p["w_a"])
+    i = jax.nn.sigmoid(u @ p["w_i"])
+    a0 = jnp.clip(p["lam"], 1e-4, 1 - 1e-4).astype(jnp.float32)
+    log_a = _C * r.astype(jnp.float32) * jnp.log(a0)         # [B, S, d_rnn]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * u).astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(p: Dict, u: jax.Array) -> jax.Array:
+    """Parallel prefix scan over the full sequence. u: [B, S, d_rnn]."""
+    a, b = _gates(p, u)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_block(p: Dict, x: jax.Array) -> jax.Array:
+    """Full Griffin recurrent block over [B, S, d] (pre-normed input)."""
+    u = x @ p["w_x"]
+    u = _causal_conv1d(u, p["w_conv"])
+    h = rglru_scan(p, u)
+    gate = jax.nn.gelu(x @ p["w_y"])
+    return (h * gate) @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) state update per token
+# ---------------------------------------------------------------------------
+
+def rglru_init_state(batch: int, d_rnn: int, conv_width: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),  # trailing inputs
+    }
+
+
+def rglru_block_decode(p: Dict, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """x: [B, 1, d]; returns ([B, 1, d], new state)."""
+    u = x @ p["w_x"]                                         # [B, 1, d_rnn]
+    hist = jnp.concatenate([state["conv"], u], axis=1)       # [B, W, d_rnn]
+    w = p["w_conv"]
+    u_conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w.astype(jnp.float32))[:, None, :]
+    u_conv = u_conv.astype(x.dtype)
+    a, b = _gates(p, u_conv)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    gate = jax.nn.gelu(x @ p["w_y"])
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h, "conv": hist[:, 1:]}

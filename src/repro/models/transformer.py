@@ -1,0 +1,336 @@
+"""Unified decoder LM covering all assigned architecture families.
+
+The network is a sequence of *periods*: a fixed pattern of block kinds
+(e.g. llama4-maverick = [attn_mlp, attn_moe], recurrentgemma =
+[rglru, rglru, local_attn]) scanned with `jax.lax.scan` over stacked
+per-period parameters, so compiled HLO size is independent of depth — a
+requirement for compiling 48-88 layer models on one host. Pattern
+remainders live in an unscanned `tail`.
+
+Block kinds:
+    attn_mlp   — GQA attention + MLP (dense transformers, musicgen, phi-3)
+    attn_moe   — GQA attention + mixture-of-experts (+ optional shared MLP)
+    local_attn — sliding-window GQA attention + MLP (recurrentgemma)
+    rglru      — RG-LRU recurrent block + MLP (recurrentgemma)
+    mlstm      — xLSTM matrix-memory block (no MLP)
+    slstm      — xLSTM scalar-memory block (no MLP)
+
+Three entry points per model: `train_loss` (next-token CE + MoE aux),
+`prefill_step` (logits + filled caches) and `decode_step` (one token against
+caches). Caches are pytrees stacked along the period axis so the decode path
+scans them in lock-step with the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .attention import (attention_block, attention_decode, attn_init, init_kv_cache)
+from .layers import dense_init, embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from .moe import moe_apply, moe_init
+from .rglru import (rglru_block, rglru_block_decode, rglru_init, rglru_init_state)
+from .xlstm import (mlstm_block, mlstm_block_decode, mlstm_init, mlstm_init_state,
+                    slstm_block, slstm_block_decode, slstm_init, slstm_init_state)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+def init_block(key, cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(d, dt)}
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        p["attn"] = attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias, dt)
+        p["norm2"] = rmsnorm_init(d, dt)
+        if kind == "attn_moe":
+            p["moe"] = moe_init(ks[1], d, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff,
+                                cfg.mlp_act, dt, cfg.shared_expert, cfg.d_ff,
+                                n_experts_padded=cfg.n_experts_padded)
+        else:
+            p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dt)
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks[0], d, cfg.d_rnn or d, cfg.conv_width, dt)
+        p["norm2"] = rmsnorm_init(d, dt)
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dt)
+    elif kind == "mlstm":
+        p["mlstm"] = mlstm_init(ks[0], d, cfg.n_heads, dt)
+    elif kind == "slstm":
+        p["slstm"] = slstm_init(ks[0], d, cfg.n_heads, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": {"w_tok": embed_init(keys[0], cfg.vocab, cfg.d_model, dt)},
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.frontend:
+        params["embed"]["w_front"] = dense_init(keys[3], cfg.d_frontend, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(keys[1], cfg.d_model, cfg.vocab, dt)}
+
+    period_keys = jax.random.split(keys[2], cfg.n_periods)
+    periods = {}
+    for si, kind in enumerate(cfg.pattern):
+        slot_keys = jax.vmap(lambda k, i=si: jax.random.fold_in(k, i))(period_keys)
+        periods[f"slot{si}"] = jax.vmap(lambda k, kd=kind: init_block(k, cfg, kd))(slot_keys)
+    params["periods"] = periods
+
+    tail_keys = jax.random.split(keys[4], max(len(cfg.tail), 1))
+    params["tail"] = tuple(init_block(tail_keys[i], cfg, kind) for i, kind in enumerate(cfg.tail))
+    return params
+
+
+# ===========================================================================
+# Forward blocks
+# ===========================================================================
+
+def _apply_block(kind: str, p: Dict, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """Residual block application. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        x = x + attention_block(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, unroll=cfg.unroll_chunks,
+            f32_streams=cfg.attn_f32_streams)
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            y, aux = moe_apply(p["moe"], h2, top_k=cfg.top_k, act=cfg.mlp_act,
+                               n_experts=cfg.n_experts,
+                               capacity_factor=cfg.capacity_factor,
+                               unroll=cfg.unroll_chunks,
+                               n_experts_padded=cfg.n_experts_padded,
+                               fsdp_experts=cfg.fsdp_experts)
+            x = x + y
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+        if cfg.sp_blocks:
+            x = _seq_shard(x)
+    elif kind == "rglru":
+        x = x + rglru_block(p["rglru"], h)
+        x = x + mlp_apply(p["mlp"], rmsnorm(x, p["norm2"], cfg.norm_eps), cfg.mlp_act)
+    elif kind == "mlstm":
+        x = x + mlstm_block(p["mlstm"], h, cfg.n_heads, cfg.mlstm_chunk,
+                            unroll=cfg.unroll_chunks)
+    elif kind == "slstm":
+        x = x + slstm_block(p["slstm"], h, cfg.n_heads)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _embed(params: Dict, batch: Dict, cfg: ArchConfig) -> jax.Array:
+    from ..dist.sharding import shard_cotangents
+    params = dict(params, embed=shard_cotangents(params["embed"]))
+    x = params["embed"]["w_tok"][batch["tokens"]]
+    if cfg.frontend:
+        front = batch["frontend_embeds"].astype(x.dtype) @ params["embed"]["w_front"]
+        x = jnp.concatenate([front, x], axis=1)
+    return x
+
+
+def _unembed(params: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["w_tok"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    return _vocab_shard(logits)
+
+
+def _vocab_shard(logits: jax.Array) -> jax.Array:
+    """Keep logits vocab-sharded over 'model' (GSPMD drops the sharding on
+    the way into the loss otherwise, replicating a [B,S,V] fp32 tensor)."""
+    from ..dist.context import current_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names or logits.ndim != 3:
+        return logits
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    if logits.shape[0] % ndp or logits.shape[-1] % mesh.shape["model"]:
+        return logits
+    return jax.lax.with_sharding_constraint(
+        logits, NamedSharding(mesh, P(dp, None, "model")))
+
+
+def _seq_shard(x: jax.Array) -> jax.Array:
+    """Sequence-shard [B, S, d] activations over the 'model' axis (SP).
+
+    Applied at period boundaries so the per-period activation checkpoints the
+    backward scan stores are 1/TP the size; GSPMD all-gathers the sequence
+    where a block genuinely needs it (attention) and reduce-scatters after.
+    No-op without an ambient mesh.
+    """
+    from ..dist.context import current_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    tp = mesh.shape["model"]
+    if x.ndim != 3 or x.shape[0] % ndp or x.shape[1] % tp:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, "model", None)))
+
+
+def forward(params: Dict, batch: Dict, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """Full forward: batch {tokens [B,S], frontend_embeds?} -> (logits, aux)."""
+    x = _embed(params, batch, cfg)
+
+    def period_fn(carry, slot_params):
+        x, aux = carry
+        x = _seq_shard(x)
+        from ..dist.sharding import shard_cotangents
+        slot_params = shard_cotangents(slot_params)
+        for si, kind in enumerate(cfg.pattern):
+            x, a = _apply_block(kind, slot_params[f"slot{si}"], x, cfg)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat == "full":
+        period_fn = jax.checkpoint(period_fn)
+
+    (x, aux), _ = jax.lax.scan(period_fn, (x, jnp.zeros((), jnp.float32)), params["periods"])
+    for i, kind in enumerate(cfg.tail):
+        x, a = _apply_block(kind, params["tail"][i], x, cfg)
+        aux = aux + a
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, x, cfg), aux
+
+
+def train_loss(params: Dict, batch: Dict, cfg: ArchConfig, aux_weight: float = 0.01) -> jax.Array:
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend:  # frontend tokens carry no labels
+        logits = logits[:, cfg.n_frontend_tokens:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + aux_weight * aux
+
+
+# ===========================================================================
+# Serving: cache init, prefill, decode
+# ===========================================================================
+
+def _init_block_cache(kind: str, cfg: ArchConfig, batch: int, seq_len: int, dt) -> Dict:
+    if kind in ("attn_mlp", "attn_moe"):
+        return init_kv_cache(batch, seq_len, cfg.n_kv_heads, cfg.hd, dt)
+    if kind == "local_attn":
+        return init_kv_cache(batch, min(cfg.window, seq_len), cfg.n_kv_heads, cfg.hd, dt)
+    if kind == "rglru":
+        return rglru_init_state(batch, cfg.d_rnn or cfg.d_model, cfg.conv_width, dt)
+    if kind == "mlstm":
+        return mlstm_init_state(batch, cfg.d_model, cfg.n_heads)
+    if kind == "slstm":
+        return slstm_init_state(batch, cfg.d_model)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    periods = {}
+    for si, kind in enumerate(cfg.pattern):
+        one = _init_block_cache(kind, cfg, batch, seq_len, dt)
+        periods[f"slot{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), one)
+    tail = tuple(_init_block_cache(kind, cfg, batch, seq_len, dt) for kind in cfg.tail)
+    return {"periods": periods, "tail": tail}
+
+
+def _decode_block(kind: str, p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
+                  cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        y, cache = attention_decode(
+            p["attn"], h, cache, pos, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=window)
+        x = x + y
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            y2, _ = moe_apply(p["moe"], h2, top_k=cfg.top_k, act=cfg.mlp_act,
+                              n_experts=cfg.n_experts,
+                              capacity_factor=cfg.capacity_factor,
+                              unroll=cfg.unroll_chunks,
+                              n_experts_padded=cfg.n_experts_padded,
+                              fsdp_experts=cfg.fsdp_experts)
+            x = x + y2
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    elif kind == "rglru":
+        y, cache = rglru_block_decode(p["rglru"], h, cache)
+        x = x + y
+        x = x + mlp_apply(p["mlp"], rmsnorm(x, p["norm2"], cfg.norm_eps), cfg.mlp_act)
+    elif kind == "mlstm":
+        y, cache = mlstm_block_decode(p["mlstm"], h, cache, cfg.n_heads)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = slstm_block_decode(p["slstm"], h, cache, cfg.n_heads)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def decode_step(params: Dict, cache: Dict, batch: Dict, pos: jax.Array,
+                cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One-token decode. batch {tokens [B,1]}; pos: scalar int32 position."""
+    x = params["embed"]["w_tok"][batch["tokens"]]
+
+    def period_fn(carry, xs):
+        x = carry
+        slot_params, slot_cache = xs
+        new_cache = {}
+        for si, kind in enumerate(cfg.pattern):
+            x, c = _decode_block(kind, slot_params[f"slot{si}"], x,
+                                 slot_cache[f"slot{si}"], pos, cfg)
+            new_cache[f"slot{si}"] = c
+        return x, new_cache
+
+    x, new_period_cache = jax.lax.scan(period_fn, x, (params["periods"], cache["periods"]))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        x, c = _decode_block(kind, params["tail"][i], x, cache["tail"][i], pos, cfg)
+        new_tail.append(c)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    return logits, {"periods": new_period_cache, "tail": tuple(new_tail)}
+
+
+def prefill_step(params: Dict, batch: Dict, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """Prefill: forward over the prompt, returning last-position logits.
+
+    (Cache extraction during prefill shares the forward path; for the
+    dry-run shape cells the lowered artifact is the full forward — decode
+    cells exercise the cache-consuming path.)
+    """
+    logits, aux = forward(params, batch, cfg)
+    return logits[:, -1:], aux

@@ -1,0 +1,264 @@
+"""Spiking VGG9 (paper §V-A) with hybrid dense/sparse execution.
+
+Network: 64C3-112C3-MP2-192C3-216C3-MP2-480C3-504C3-560C3-MP2-FC(1064)-FC(P)
+with LIF neurons after every conv/FC layer, population-coded output (P
+neurons, class score = spike count over the class's neuron group), trained
+with surrogate gradients (BPTT over T timesteps) and optional int4 QAT.
+
+Execution paths:
+  * training / eval  — pure-JAX (lax.conv), autodiff-friendly; direct coding
+    hoists the input conv out of the timestep scan (bit-exact, the input is
+    timestep-invariant — dense-core observation from the paper).
+  * hybrid inference — dense core kernel (kernels/dense_conv_lif) for the
+    input layer + occupancy-gated spike_conv kernels for the spiking layers;
+    validated against the training path in tests.
+
+Every forward returns per-layer spike counts (the Eq. 3 workload inputs and
+the Fig. 1 quantization-sparsity measurements).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.coding import direct_code, rate_code
+from ..core.lif import LIFParams, lif_step
+from ..core.quant import fake_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class VGG9Config:
+    num_classes: int = 10
+    population: int = 1000          # P output neurons (paper: 1000 / 5000)
+    timesteps: int = 2
+    beta: float = 0.15
+    theta: float = 0.5
+    coding: str = "direct"          # direct | rate
+    quant_bits: int = 0             # 0 = fp32, 4 = int4 QAT (biases int8)
+    img_hw: int = 32
+    in_ch: int = 3
+    stages: Tuple = (64, 112, "MP", 192, 216, "MP", 480, 504, 560, "MP")
+    fc_dim: int = 1064
+    hoist_input_conv: bool = True   # beyond-paper: reuse timestep-invariant conv
+    surrogate_slope: float = 25.0
+
+    @property
+    def conv_channels(self):
+        return [c for c in self.stages if c != "MP"]
+
+    @property
+    def lif(self) -> LIFParams:
+        return LIFParams(self.beta, self.theta, self.surrogate_slope)
+
+
+def conv_names(cfg: VGG9Config):
+    return [f"conv{i}" for i in range(len(cfg.conv_channels))]
+
+
+def init_vgg9(key, cfg: VGG9Config, dtype=jnp.float32) -> Dict:
+    params = {}
+    cin = cfg.in_ch
+    keys = jax.random.split(key, len(cfg.conv_channels) + 2)
+    for i, cout in enumerate(cfg.conv_channels):
+        fan_in = 3 * 3 * cin
+        params[f"conv{i}"] = {
+            "w": (jax.random.normal(keys[i], (3, 3, cin, cout)) * (2.0 / fan_in) ** 0.5).astype(dtype),
+            "b": jnp.zeros((cout,), dtype),
+        }
+        cin = cout
+    n_mp = sum(1 for s in cfg.stages if s == "MP")
+    hw = cfg.img_hw // (2 ** n_mp)
+    flat = hw * hw * cfg.conv_channels[-1]
+    params["fc0"] = {
+        "w": (jax.random.normal(keys[-2], (flat, cfg.fc_dim)) * (1.0 / flat) ** 0.5).astype(dtype),
+        "b": jnp.zeros((cfg.fc_dim,), dtype),
+    }
+    params["fc1"] = {
+        "w": (jax.random.normal(keys[-1], (cfg.fc_dim, cfg.population)) * (1.0 / cfg.fc_dim) ** 0.5).astype(dtype),
+        "b": jnp.zeros((cfg.population,), dtype),
+    }
+    return params
+
+
+def quantized_view(params: Dict, cfg: VGG9Config) -> Dict:
+    """QAT fake-quant view of the weights (paper §II-B): int-`quant_bits`
+    weights, int8 biases, neuronal parameters untouched."""
+    if cfg.quant_bits == 0:
+        return params
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: fake_quant(x, cfg.quant_bits, None)
+        if path[-1].key == "w" else fake_quant(x, 8, None),
+        params)
+
+
+def _conv(x, p):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+
+
+def _maxpool_spikes(s):
+    """2x2 max-pool on binary spikes == OR gate over the window (paper §IV-B)."""
+    return jax.lax.reduce_window(s, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def vgg9_forward(params: Dict, images: jax.Array, cfg: VGG9Config, *,
+                 rng: jax.Array | None = None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """images [B,H,W,C] -> (logits [B,num_classes], spike counts per layer).
+
+    BPTT-ready: the timestep loop is a lax.scan carrying membrane potentials
+    and previous spikes for every LIF layer.
+    """
+    qp = quantized_view(params, cfg)
+    lif = cfg.lif
+    names = conv_names(cfg) + ["fc0", "fc1"]
+    b = images.shape[0]
+
+    # layer output shapes (for state init)
+    shapes = {}
+    hw = cfg.img_hw
+    stage_of = []
+    ci = 0
+    for s in cfg.stages:
+        if s == "MP":
+            hw //= 2
+            stage_of.append(("MP", None))
+        else:
+            shapes[f"conv{ci}"] = (b, hw, hw, s)
+            stage_of.append(("conv", ci))
+            ci += 1
+    shapes["fc0"] = (b, cfg.fc_dim)
+    shapes["fc1"] = (b, cfg.population)
+
+    def zeros_state():
+        return {n: (jnp.zeros(shapes[n], jnp.float32), jnp.zeros(shapes[n], jnp.float32))
+                for n in names}
+
+    if cfg.coding == "direct":
+        if cfg.hoist_input_conv:
+            input_current = _conv(images, qp["conv0"])   # computed once, reused T times
+            currents_in = jnp.broadcast_to(input_current[None],
+                                           (cfg.timesteps,) + input_current.shape)
+        else:
+            coded = direct_code(images, cfg.timesteps)
+            currents_in = jax.vmap(lambda im: _conv(im, qp["conv0"]))(coded)
+    else:  # rate coding: binary input spikes, conv0 acts as a sparse layer
+        assert rng is not None, "rate coding needs an rng key"
+        coded = rate_code(rng, images, cfg.timesteps)
+        currents_in = jax.vmap(lambda sp: _conv(sp, qp["conv0"]))(coded)
+
+    def timestep(carry, current0):
+        state = carry
+        new_state = {}
+        counts = {}
+
+        def fire(name, current):
+            u, s_prev = state[name]
+            u_next, s = lif_step(u, current, s_prev, lif)
+            new_state[name] = (u_next, s)
+            counts[name] = jnp.sum(s)
+            return s
+
+        s = fire("conv0", current0)
+        ci = 1
+        for kind, idx in stage_of:
+            if kind == "MP":
+                s = _maxpool_spikes(s)
+            elif idx is not None and idx > 0:
+                s = fire(f"conv{idx}", _conv(s, qp[f"conv{idx}"]))
+        s = s.reshape(b, -1)
+        s = fire("fc0", s @ qp["fc0"]["w"] + qp["fc0"]["b"])
+        s_out = fire("fc1", s @ qp["fc1"]["w"] + qp["fc1"]["b"])
+        return new_state, (s_out, counts)
+
+    _, (out_spikes, counts) = jax.lax.scan(timestep, zeros_state(), currents_in)
+    # population decoding: class score = total spikes in the class's group
+    group = cfg.population // cfg.num_classes
+    pop = out_spikes.sum(0)                                  # [B, P] spike counts over T
+    logits = pop.reshape(b, cfg.num_classes, group).sum(-1) / (cfg.timesteps * group)
+    total_counts = {k: counts[k].sum(0) for k in counts}  # scan stacked over T
+    return logits, total_counts
+
+
+def vgg9_loss(params: Dict, batch: Dict, cfg: VGG9Config, *, rng=None) -> jax.Array:
+    logits, _ = vgg9_forward(params, batch["images"], cfg, rng=rng)
+    labels = batch["labels"]
+    logits = logits * 10.0  # population rates are in [0,1]; sharpen for CE
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid kernel inference path (dense core + sparse cores)
+# ---------------------------------------------------------------------------
+
+def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
+                      interpret: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Inference via the TPU kernels: dense_conv_lif for the input layer,
+    occupancy-gated spike_conv + fused lif_step for the spiking layers.
+
+    Direct coding only. Numerics match vgg9_forward (tests assert)."""
+    from ..kernels.dense_conv_lif.ops import input_layer_conv_lif
+    from ..kernels.spike_conv.ops import spike_conv2d
+    from ..kernels.lif_step.ops import lif_update
+
+    assert cfg.coding == "direct"
+    qp = quantized_view(params, cfg)
+    b = images.shape[0]
+    lif = cfg.lif
+
+    # Dense core: input layer, conv once + T fused LIF steps
+    spikes, _ = input_layer_conv_lif(
+        images, qp["conv0"]["w"], qp["conv0"]["b"],
+        num_steps=cfg.timesteps, beta=cfg.beta, theta=cfg.theta, interpret=interpret)
+    counts = {"conv0": jnp.sum(spikes)}
+
+    # Sparse cores: per layer, per timestep event-driven conv + LIF
+    stage_plan = []
+    ci = 0
+    for s in cfg.stages:
+        if s == "MP":
+            stage_plan.append(("MP", None))
+        else:
+            if ci > 0:
+                stage_plan.append(("conv", ci))
+            ci += 1
+
+    layer_in = spikes                                       # [T, B, H, W, C]
+    for kind, idx in stage_plan:
+        if kind == "MP":
+            layer_in = jax.vmap(_maxpool_spikes)(layer_in)
+            continue
+        name = f"conv{idx}"
+        u = jnp.zeros(layer_in.shape[1:-1] + (qp[name]["w"].shape[-1],), jnp.float32)
+        s_prev = jnp.zeros_like(u)
+        outs = []
+        for t in range(cfg.timesteps):
+            cur = spike_conv2d(layer_in[t], qp[name]["w"], interpret=interpret) + qp[name]["b"]
+            u, s_prev = lif_update(u, cur, s_prev, beta=cfg.beta, theta=cfg.theta,
+                                   interpret=interpret)
+            outs.append(s_prev)
+        layer_in = jnp.stack(outs)
+        counts[name] = jnp.sum(layer_in)
+
+    # FC layers (sparse cores with URAM weights in the paper)
+    flat = layer_in.reshape(cfg.timesteps, b, -1)
+    for name in ("fc0", "fc1"):
+        u = jnp.zeros((b, qp[name]["w"].shape[-1]), jnp.float32)
+        s_prev = jnp.zeros_like(u)
+        outs = []
+        for t in range(cfg.timesteps):
+            cur = flat[t] @ qp[name]["w"] + qp[name]["b"]
+            u, s_prev = lif_update(u, cur, s_prev, beta=cfg.beta, theta=cfg.theta,
+                                   interpret=interpret)
+            outs.append(s_prev)
+        flat = jnp.stack(outs)
+        counts[name] = jnp.sum(flat)
+
+    group = cfg.population // cfg.num_classes
+    pop = flat.sum(0)
+    logits = pop.reshape(b, cfg.num_classes, group).sum(-1) / (cfg.timesteps * group)
+    return logits, counts

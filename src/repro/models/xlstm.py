@@ -1,0 +1,232 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM recurrence (per head, stabilized, state stored pre-scaled by exp(-m)):
+
+    m_t = max(lf_t + m_{t-1}, li_t)
+    C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(li_t - m_t) k_t v_t^T
+    n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(li_t - m_t) k_t
+    h_t = o_t * (q_t C_t) / max(|q_t . n_t|, exp(-m_t))
+
+Training/prefill uses an exact *chunkwise-parallel* form: within a chunk the
+decay matrix D_ij = exp(F_i - F_j + li_j) is applied to a masked quadratic
+(attention-like, MXU-friendly) score, across chunks the (C, n, m) state is
+carried by lax.scan. Per-position stabilizers are computed in closed form
+(m_i = F_i + max(m_prev, cummax_j(li_j - F_j))) so the chunked path is
+bit-compatible with the sequential recurrence (tests assert this).
+
+sLSTM has hidden-state feedback in its gates (true recurrence, not
+parallelizable); it runs as a lax.scan over time with block-diagonal
+per-head recurrent weights.
+
+Both are leaky-integrator relatives of the paper's LIF neuron (DESIGN.md §4):
+mLSTM's forget gate is a learned, input-dependent beta.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(key, d: int, n_heads: int, dtype) -> Dict:
+    d_in = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, d_in, dtype),
+        "w_gate": dense_init(ks[1], d, d_in, dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype),
+        "w_if": dense_init(ks[5], d_in, 2 * n_heads, dtype),   # input/forget gate logits
+        "w_down": dense_init(ks[6], d_in, d, dtype),
+        "b_f": jnp.full((n_heads,), 3.0, jnp.float32),          # forget bias -> long memory
+    }
+
+
+def _mlstm_qkv_gates(p: Dict, x: jax.Array, n_heads: int):
+    b, s, _ = x.shape
+    u = x @ p["w_up"]
+    d_in = u.shape[-1]
+    hd = d_in // n_heads
+    q = (u @ p["wq"]).reshape(b, s, n_heads, hd) / math.sqrt(hd)
+    k = (u @ p["wk"]).reshape(b, s, n_heads, hd) / math.sqrt(hd)
+    v = (u @ p["wv"]).reshape(b, s, n_heads, hd)
+    gates = (u @ p["w_if"]).astype(jnp.float32).reshape(b, s, n_heads, 2)
+    li = gates[..., 0]                                          # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(gates[..., 1] + p["b_f"])           # log forget gate
+    gate_out = jax.nn.silu(x @ p["w_gate"])
+    return q, k, v, li, lf, gate_out, u
+
+
+def mlstm_block(p: Dict, x: jax.Array, n_heads: int, chunk: int = 256,
+                unroll: bool = False) -> jax.Array:
+    """Chunkwise-parallel mLSTM over [B, S, d].
+
+    unroll=True replaces the chunk scan with a Python loop (dry-run cost
+    lowering; see EXPERIMENTS.md §Methodology)."""
+    b, s, d = x.shape
+    q, k, v, li, lf, gate_out, _ = _mlstm_qkv_gates(p, x, n_heads)
+    hd = q.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # reshape to [nc, B, H, L, ...] for scan over chunks
+    def rc(a, feat):
+        a = a.reshape(b, nc, chunk, n_heads, *feat)
+        return jnp.moveaxis(jnp.moveaxis(a, 1, 0), 3, 2)        # [nc, B, H, L, feat]
+
+    qc = rc(q.astype(jnp.float32), (hd,))
+    kc = rc(k.astype(jnp.float32), (hd,))
+    vc = rc(v.astype(jnp.float32), (hd,))
+    lic = rc(li, ())
+    lfc = rc(lf, ())
+
+    def chunk_body(carry, xs):
+        C, n, m = carry                                         # [B,H,hd,hd], [B,H,hd], [B,H]
+        qi, ki, vi, lii, lfi = xs
+        F = jnp.cumsum(lfi, axis=-1)                            # [B,H,L] inclusive cumsum
+        # per-position stabilizer (exact sequential m): m_i = F_i + max(m_prev, cummax(li_j - F_j))
+        g = jnp.maximum(m[..., None], jax.lax.cummax(lii - F, axis=2))
+        m_i = F + g                                             # [B,H,L]
+        # inter-chunk: qi against carried state, decay exp(F_i + m_prev - m_i)
+        inter_w = jnp.exp(F + m[..., None] - m_i)               # [B,H,L]
+        h_inter = jnp.einsum("bhlq,bhqd->bhld", qi * inter_w[..., None], C)
+        n_inter = jnp.einsum("bhlq,bhq->bhl", qi * inter_w[..., None], n)
+        # intra-chunk: D_ij = exp(F_i - F_j + li_j - m_i) masked causal
+        D = F[..., :, None] - F[..., None, :] + lii[..., None, :] - m_i[..., :, None]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(mask[None, None], D, NEG)
+        sc = jnp.einsum("bhld,bhjd->bhlj", qi, ki) * jnp.exp(D)
+        h_intra = jnp.einsum("bhlj,bhjd->bhld", sc, vi)
+        # normalizer: n_i = sum_j D_ij (q_i . k_j) + inter term
+        n_intra = jnp.sum(sc, axis=-1)
+        num = h_inter + h_intra                                 # [B,H,L,hd]
+        den = n_inter + n_intra                                 # [B,H,L]
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update to end of chunk
+        F_tot = F[..., -1]
+        m_next = jnp.maximum(m + F_tot, jnp.max(F_tot[..., None] - F + lii, axis=-1))
+        decay_state = jnp.exp(m + F_tot - m_next)
+        w_j = jnp.exp(F_tot[..., None] - F + lii - m_next[..., None])  # [B,H,L]
+        C_next = decay_state[..., None, None] * C + jnp.einsum("bhjd,bhje->bhde", ki * w_j[..., None], vi)
+        n_next = decay_state[..., None] * n + jnp.sum(ki * w_j[..., None], axis=2)
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+    m0 = jnp.full((b, n_heads), NEG, jnp.float32)
+    if unroll:
+        carry = (C0, n0, m0)
+        hs_list = []
+        for ci in range(nc):
+            carry, h_i = chunk_body(carry, (qc[ci], kc[ci], vc[ci], lic[ci], lfc[ci]))
+            hs_list.append(h_i)
+        hs = jnp.stack(hs_list)
+    else:
+        _, hs = jax.lax.scan(chunk_body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    # hs: [nc, B, H, L, hd] -> [B, nc, L, H, hd] -> [B, S, H*hd]
+    h = jnp.moveaxis(hs, 0, 1).transpose(0, 1, 3, 2, 4).reshape(b, s, n_heads * hd)
+    out = (h.astype(x.dtype) * gate_out) @ p["w_down"]
+    return out
+
+
+def mlstm_init_state(batch: int, d: int, n_heads: int) -> Dict[str, jax.Array]:
+    hd = 2 * d // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), NEG, jnp.float32),
+    }
+
+
+def mlstm_block_decode(p: Dict, x: jax.Array, state: Dict, n_heads: int) -> Tuple[jax.Array, Dict]:
+    """One-token mLSTM update. x: [B, 1, d]."""
+    b = x.shape[0]
+    q, k, v, li, lf, gate_out, _ = _mlstm_qkv_gates(p, x, n_heads)
+    q, k, v = (a[:, 0].astype(jnp.float32) for a in (q, k, v))   # [B,H,hd]
+    li, lf = li[:, 0], lf[:, 0]                                  # [B,H]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_t = jnp.maximum(lf + m, li)
+    dec = jnp.exp(lf + m - m_t)[..., None]
+    inp = jnp.exp(li - m_t)[..., None]
+    C_t = dec[..., None] * C + inp[..., None] * (k[..., :, None] * v[..., None, :])
+    n_t = dec * n + inp * k
+    num = jnp.einsum("bhq,bhqd->bhd", q, C_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", q, n_t)), jnp.exp(-m_t))
+    h = (num / den[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    out = (h * gate_out) @ p["w_down"]
+    return out, {"C": C_t, "n": n_t, "m": m_t}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(key, d: int, n_heads: int, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    hd = d // n_heads
+    r = jax.random.normal(ks[1], (4, n_heads, hd, hd), jnp.float32) * (0.02 / math.sqrt(hd))
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),              # z, i, f, o pre-activations
+        "r": r.astype(dtype),                                    # recurrent block-diagonal
+        "w_out": dense_init(ks[2], d, d, dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(jnp.float32),
+    }
+
+
+def _slstm_step(p: Dict, n_heads: int, carry, wx_t):
+    """carry: (c, n, m, h) each [B, d] (fp32); wx_t: [B, 4d] input projection."""
+    c, n, m, h = carry
+    b, d = c.shape
+    hd = d // n_heads
+    hh = h.reshape(b, n_heads, hd)
+    rec = jnp.einsum("bhk,ghkl->bghl", hh, p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    pre = wx_t.astype(jnp.float32) + rec + p["b"]
+    z = jnp.tanh(pre[:, 0:d])
+    li = pre[:, d:2 * d]                                          # exp input gate (log domain)
+    lf = jax.nn.log_sigmoid(pre[:, 2 * d:3 * d])
+    o = jax.nn.sigmoid(pre[:, 3 * d:4 * d])
+    m_t = jnp.maximum(lf + m, li)
+    dec = jnp.exp(lf + m - m_t)
+    inp = jnp.exp(li - m_t)
+    c_t = dec * c + inp * z
+    n_t = dec * n + inp
+    h_t = o * c_t / jnp.maximum(n_t, jnp.exp(-m_t))
+    return (c_t, n_t, m_t, h_t), h_t
+
+
+def slstm_block(p: Dict, x: jax.Array, n_heads: int) -> jax.Array:
+    """Sequential sLSTM over [B, S, d] (true recurrence; lax.scan over time)."""
+    b, s, d = x.shape
+    wx = (x @ p["w_in"]).astype(jnp.float32)                      # [B, S, 4d]
+    c0 = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), NEG, jnp.float32)
+    carry0 = (c0, c0, m0, c0)
+    step = lambda carry, wx_t: _slstm_step(p, n_heads, carry, wx_t)
+    _, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                    # [B, S, d]
+    return h @ p["w_out"]
+
+
+def slstm_init_state(batch: int, d: int) -> Dict[str, jax.Array]:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), NEG, jnp.float32), "h": z}
+
+
+def slstm_block_decode(p: Dict, x: jax.Array, state: Dict, n_heads: int) -> Tuple[jax.Array, Dict]:
+    wx = (x[:, 0] @ p["w_in"]).astype(jnp.float32)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), h_out = _slstm_step(p, n_heads, carry, wx)
+    out = (h_out[:, None].astype(x.dtype)) @ p["w_out"]
+    return out, {"c": c, "n": n, "m": m, "h": h}

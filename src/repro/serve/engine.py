@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + greedy decode with KV caches.
+
+A deliberately small but real engine: fixed-slot batching (the production
+pattern for TPU serving — static shapes, no recompilation), jit'd decode
+step shared across requests, optional int4-weight numerics (the paper's
+quantization pipeline generalized to LM serving; on TPU the packed
+kernels/int4_matmul path provides the same numerics with 4x less HBM
+traffic — equivalence tested in tests/test_kernels_int4.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.quant import fake_quant
+from ..models import transformer as tf
+
+
+def _quantized_params(params, bits: int):
+    def walk(path, x):
+        key = jax.tree_util.keystr(path)
+        if x.ndim >= 2 and (".w" in key or "w_" in key) and "norm" not in key:
+            return fake_quant(x, bits, None)
+        return x
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+class ServeEngine:
+    """Greedy batched generation over the unified LM."""
+
+    def __init__(self, cfg: ArchConfig, params, *, batch_slots: int = 8,
+                 max_seq: int = 512, quant_bits: int = 0):
+        self.cfg = cfg
+        self.batch = batch_slots
+        self.max_seq = max_seq
+        self.params = _quantized_params(params, quant_bits) if quant_bits else params
+
+        @functools.partial(jax.jit, static_argnums=())
+        def step(params, cache, tokens, pos):
+            logits, cache = tf.decode_step(params, cache, {"tokens": tokens}, pos, cfg)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache            # [B, 1] — feeds the next step
+
+        self._step = step
+
+    def generate(self, prompts: List[List[int]], num_tokens: int) -> List[List[int]]:
+        """Greedy-decode `num_tokens` for a batch of prompts (padded to the
+        slot count; prompts consumed teacher-forced during prefill)."""
+        assert len(prompts) <= self.batch
+        plen = max(len(p) for p in prompts)
+        toks = jnp.zeros((self.batch, plen), jnp.int32)
+        for i, p in enumerate(prompts):
+            toks = toks.at[i, :len(p)].set(jnp.array(p, jnp.int32))
+
+        cache = tf.init_cache(self.cfg, self.batch, self.max_seq)
+        # prefill: teacher-forced decode over the prompt (fills the caches)
+        nxt = None
+        for t in range(plen):
+            nxt, cache = self._step(self.params, cache, toks[:, t:t + 1], jnp.int32(t))
+        out = [list(p) for p in prompts]
+        cur = nxt
+        for k in range(num_tokens):
+            pos = jnp.int32(plen + k)
+            for i in range(len(prompts)):
+                out[i].append(int(cur[i, 0]))
+            cur, cache = self._step(self.params, cache, cur, pos)
+        return out

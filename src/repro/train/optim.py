@@ -1,0 +1,167 @@
+"""Optimizers (pure pytree transforms): SGD-M, AdamW, Adafactor.
+
+No external deps — each optimizer is (init, update):
+    state = init(params)
+    updates, state = update(grads, state, params, lr)
+    params = apply_updates(params, updates)
+
+ZeRO-1: `zero1_sharding()` produces optimizer-state shardings with the
+leading divisible axis additionally sharded over the data axis, so Adam
+moments / fp32 masters are partitioned across data-parallel replicas
+(the standard optimizer-state sharding trick; restore-time resharding in
+train.checkpoint makes this elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum
+# ---------------------------------------------------------------------------
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        upd = jax.tree.map(
+            lambda m, p: -lr * (m + weight_decay * p.astype(jnp.float32)), mu, params)
+        return upd, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (fp32 master moments; bias-corrected)
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v, p: -lr * ((m / c1) / (jnp.sqrt(v / c2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory ~ O(rows+cols))
+# ---------------------------------------------------------------------------
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30, clip_thresh: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Simplified Adafactor (Shazeer & Stern): factored v for >=2D params,
+    no momentum — the optimizer-state choice for the 400B MoE config."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"s": jax.tree.map(leaf, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS <= clip_thresh)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            upd = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return upd, ns
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upd = tdef.unflatten([o[0] for o in out])
+        ns = tdef.unflatten([o[1] for o in out])
+        return upd, {"s": ns, "t": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+def zero1_spec(param_spec, shape, data_axis: str = "data"):
+    """Add `data` sharding to the first axis that is unsharded & divisible.
+
+    param_spec: jax.sharding.PartitionSpec of the parameter.
+    Returns a PartitionSpec for fp32 optimizer moments of the same shape.
+    """
+    from jax.sharding import PartitionSpec as P
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % 2 == 0:  # divisibility refined by caller's mesh
+            entries[i] = data_axis
+            return P(*entries)
+    return P(*entries)

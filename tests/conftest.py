@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the single real CPU
+device; multi-device tests spawn subprocesses with their own flags."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

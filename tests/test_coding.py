@@ -1,0 +1,35 @@
+"""Direct vs rate coding (paper §I, §V-D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coding import direct_code, rate_code, sparsity, spike_count
+
+
+def test_direct_code_repeats_input():
+    x = jax.random.uniform(jax.random.PRNGKey(0), (2, 4, 4, 3))
+    coded = direct_code(x, 3)
+    assert coded.shape == (3, 2, 4, 4, 3)
+    for t in range(3):
+        np.testing.assert_array_equal(np.asarray(coded[t]), np.asarray(x))
+
+
+def test_rate_code_is_binary_with_matching_rate():
+    x = jnp.full((1, 32, 32, 3), 0.3)
+    spikes = rate_code(jax.random.PRNGKey(0), x, 200)
+    assert set(np.unique(np.asarray(spikes))) <= {0.0, 1.0}
+    rate = float(spikes.mean())
+    assert abs(rate - 0.3) < 0.02
+
+
+def test_rate_code_extremes():
+    x = jnp.stack([jnp.zeros((4, 4)), jnp.ones((4, 4))])
+    spikes = rate_code(jax.random.PRNGKey(1), x, 10)
+    assert float(spikes[:, 0].sum()) == 0.0
+    assert float(spikes[:, 1].mean()) == 1.0
+
+
+def test_spike_count_and_sparsity():
+    s = jnp.array([[1.0, 0, 0, 0], [0, 1.0, 0, 0]])
+    assert int(spike_count(s)) == 2
+    np.testing.assert_allclose(float(sparsity(s)), 0.75)

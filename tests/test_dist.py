@@ -1,0 +1,162 @@
+"""Distribution tests: sharding rules, compression, multi-device subprocess.
+
+Multi-device cases run in a subprocess with XLA_FLAGS so the main test
+process keeps its single-device view.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import sharding as shd
+from repro.dist.compression import quantize_error_feedback
+
+
+def _run_subprocess(code: str, n_dev: int = 8) -> str:
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd=".",
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (no devices needed — pure spec logic vs a fake mesh)
+# ---------------------------------------------------------------------------
+
+def test_param_rules_divisibility_repair():
+    import jax.sharding as js
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(js.AxisType.Auto,) * 2)
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = shd.param_spec((jax.tree_util.DictKey("embed"), jax.tree_util.DictKey("w_tok")),
+                          jax.ShapeDtypeStruct((49155, 1536), jnp.float32), FakeMesh())
+    # 49155 % 16 != 0 -> vocab axis dropped, moved to d_model
+    assert spec == js.PartitionSpec(None, "model")
+
+    spec2 = shd.param_spec((jax.tree_util.DictKey("attn"), jax.tree_util.DictKey("wq")),
+                           jax.ShapeDtypeStruct((1536, 1536), jnp.float32), FakeMesh())
+    assert spec2 == js.PartitionSpec(None, "model")
+
+    # stacked period axis gets a leading None
+    spec3 = shd.param_spec((jax.tree_util.DictKey("attn"), jax.tree_util.DictKey("wq")),
+                           jax.ShapeDtypeStruct((24, 1536, 1536), jnp.float32), FakeMesh())
+    assert spec3 == js.PartitionSpec(None, None, "model")
+
+
+def test_norms_replicated():
+    import jax.sharding as js
+    spec = shd.param_spec((jax.tree_util.DictKey("norm1"),),
+                          jax.ShapeDtypeStruct((1536,), jnp.float32), None)
+    assert spec == js.PartitionSpec()
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_accumulates_residual():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))
+    err = jnp.zeros(64)
+    q, scale, new_err = quantize_error_feedback(g, err)
+    recon = q.astype(jnp.float32) * scale
+    np.testing.assert_allclose(np.asarray(recon + new_err), np.asarray(g), atol=1e-6)
+    assert q.dtype == jnp.int8
+
+
+def test_compressed_psum_multi_device():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.compression import compressed_psum, init_error_state
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        grads = {"w": jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)}
+        err = {"w": jnp.zeros((8, 4))}
+
+        def f(g, e):
+            return compressed_psum(g, e, "data")
+
+        out, new_err = jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=(P("data"), P("data")), check_vma=False))(grads, err)
+        # mean over 8 shards of rows -> every shard's result == global mean row
+        expect = np.arange(32, dtype=np.float32).reshape(8, 4).mean(0)
+        got = np.asarray(out["w"][0])
+        err_mag = np.abs(got - expect).max()
+        rel = err_mag / (np.abs(expect).max())
+        print("REL", rel)
+        assert rel < 0.02, (got, expect)   # int8 quantization error ~1/127
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_and_elastic_restore():
+    """End-to-end on 8 fake devices: sharded train step runs, checkpoint
+    written on a (4,2) mesh restores onto a (8,1) mesh (elastic)."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.base import ArchConfig
+        from repro.models import transformer as tf
+        from repro.train.optim import adamw
+        from repro.train.train_step import make_train_step, init_train_state
+        from repro.train.schedule import constant
+        from repro.train import checkpoint as ckpt
+        from repro.dist import sharding as shd
+        from repro.dist.context import compute_mesh
+
+        cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=32,
+                         n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64,
+                         vocab=64, dtype="float32", remat="none",
+                         q_chunk=8, kv_chunk=8)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        opt = adamw(weight_decay=0.0)
+        step = make_train_step(lambda p, b: tf.train_loss(p, b, cfg), opt,
+                               constant(1e-2))
+        with mesh, compute_mesh(mesh):
+            params = tf.init_params(jax.random.PRNGKey(0), cfg)
+            state = init_train_state(params, opt)
+            p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                shd.param_specs(jax.eval_shape(lambda: params), mesh),
+                                is_leaf=lambda x: isinstance(x, P))
+            state = dict(state, params=jax.tree.map(jax.device_put, state["params"], p_sh))
+            batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+                     "labels": jnp.ones((8, 16), jnp.int32)}
+            bs = NamedSharding(mesh, P("data", None))
+            batch = jax.tree.map(lambda x: jax.device_put(x, bs), batch)
+            state2, metrics = jax.jit(step)(state, batch)
+            print("loss", float(metrics["loss"]))
+            assert np.isfinite(float(metrics["loss"]))
+
+        with tempfile.TemporaryDirectory() as td:
+            ckpt.save(td, 1, jax.device_get(state2))
+            # elastic: restore onto a different mesh
+            mesh2 = jax.make_mesh((8, 1), ("data", "model"),
+                                  axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            tmpl = jax.eval_shape(lambda: state2)
+            sh2 = jax.tree.map(
+                lambda l: NamedSharding(mesh2, P()), tmpl)
+            restored = ckpt.restore(td, 1, tmpl, shardings=sh2)
+            w1 = np.asarray(jax.device_get(state2["params"]["final_norm"]))
+            w2 = np.asarray(jax.device_get(restored["params"]["final_norm"]))
+            np.testing.assert_array_equal(w1, w2)
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,55 @@
+"""Fused flash-attention kernel vs oracle (shape/dtype/block sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import causal_attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _ref_gqa(q, k, v):
+    b, s, h, hd = q.shape
+    g = h // k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, hd)
+    return causal_attention_ref(qf, kf, vf).reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (2, 32, 4, 2, 16), (1, 64, 2, 1, 32), (1, 16, 4, 4, 8),
+])
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 32)])
+def test_flash_matches_oracle(b, s, h, kv, hd, bq, bk):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)).astype(np.float32))
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_ref_gqa(q, k, v)),
+                               atol=5e-5)
+
+
+def test_flash_causal_block_skip_exact():
+    """The causal @pl.when block skip must not change results."""
+    b, s, h, kv, hd = 1, 32, 2, 2, 8
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)).astype(np.float32))
+    small = flash_attention(q, k, v, block_q=4, block_k=4, interpret=True)
+    big = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(small), np.asarray(big), atol=5e-6)
+
+
+def test_flash_bf16_inputs():
+    b, s, h, kv, hd = 1, 32, 2, 1, 16
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd))).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=8, block_k=8, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    ref = _ref_gqa(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32), np.asarray(ref),
+                               atol=0.05)

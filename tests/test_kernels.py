@@ -1,0 +1,135 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+All kernels run in interpret mode (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import quantize_int4
+from repro.kernels.dense_conv_lif.ops import input_layer_conv_lif
+from repro.kernels.dense_conv_lif.ref import dense_conv_lif_ref
+from repro.kernels.int4_matmul.ops import w4a16_linear
+from repro.kernels.int4_matmul.ref import int4_matmul_ref
+from repro.kernels.lif_step.ops import lif_update
+from repro.kernels.lif_step.ref import lif_step_ref
+from repro.kernels.spike_conv.ops import spike_conv2d
+from repro.kernels.spike_conv.ref import conv_ref, event_conv_ref, im2col
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# spike_conv: occupancy-gated event-driven convolution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,cout", [
+    ((1, 8, 8, 8), 16), ((2, 16, 16, 3), 32), ((1, 7, 9, 5), 13),
+])
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.9])
+def test_spike_conv_matches_dense_oracle(shape, cout, density):
+    s = (RNG.random(shape) < density).astype(np.float32)
+    w = RNG.normal(size=(3, 3, shape[-1], cout)).astype(np.float32)
+    out = spike_conv2d(jnp.asarray(s), jnp.asarray(w), interpret=True)
+    ref = conv_ref(jnp.asarray(s), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_event_driven_semantics_equal_dense():
+    """The paper's scatter-accumulate event semantics == dense conv."""
+    s = (RNG.random((2, 10, 10, 4)) < 0.2).astype(np.float32)
+    w = RNG.normal(size=(3, 3, 4, 8)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(event_conv_ref(jnp.asarray(s), jnp.asarray(w))),
+        np.asarray(conv_ref(jnp.asarray(s), jnp.asarray(w))), atol=1e-4)
+
+
+def test_spike_conv_gate_on_off_identical():
+    """Occupancy gating must not change results (only skip empty tiles)."""
+    s = (RNG.random((1, 12, 12, 16)) < 0.05).astype(np.float32)
+    s[:, 6:, :, :] = 0.0  # guarantee empty tiles
+    w = RNG.normal(size=(3, 3, 16, 16)).astype(np.float32)
+    a = spike_conv2d(jnp.asarray(s), jnp.asarray(w), gate=True, interpret=True)
+    b = spike_conv2d(jnp.asarray(s), jnp.asarray(w), gate=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_spike_conv_all_zero_input():
+    s = np.zeros((1, 8, 8, 8), np.float32)
+    w = RNG.normal(size=(3, 3, 8, 8)).astype(np.float32)
+    out = spike_conv2d(jnp.asarray(s), jnp.asarray(w), interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_im2col_matches_conv():
+    x = RNG.normal(size=(2, 6, 6, 3)).astype(np.float32)
+    w = RNG.normal(size=(3, 3, 3, 4)).astype(np.float32)
+    patches = im2col(jnp.asarray(x), 3, 3, "SAME")
+    out = (patches @ jnp.asarray(w.reshape(27, 4))).reshape(2, 6, 6, 4)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(conv_ref(jnp.asarray(x), jnp.asarray(w))),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dense_conv_lif: weight-stationary input layer + fused T-step LIF
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_steps", [1, 2, 4])
+@pytest.mark.parametrize("cout", [16, 64])
+def test_dense_conv_lif_matches_ref(num_steps, cout):
+    img = RNG.normal(size=(2, 8, 8, 3)).astype(np.float32)
+    w = (RNG.normal(size=(3, 3, 3, cout)) * 0.3).astype(np.float32)
+    b = (RNG.normal(size=(cout,)) * 0.1).astype(np.float32)
+    spk, u = input_layer_conv_lif(jnp.asarray(img), jnp.asarray(w), jnp.asarray(b),
+                                  num_steps=num_steps, interpret=True)
+    patches = im2col(jnp.asarray(img), 3, 3, "SAME")
+    rs, ru = dense_conv_lif_ref(patches, jnp.asarray(w.reshape(27, cout)), jnp.asarray(b),
+                                num_steps=num_steps, beta=0.15, theta=0.5)
+    np.testing.assert_array_equal(np.asarray(spk).reshape(num_steps, -1, cout), np.asarray(rs))
+    np.testing.assert_allclose(np.asarray(u).reshape(-1, cout), np.asarray(ru), atol=1e-5)
+
+
+def test_dense_conv_lif_spikes_binary():
+    img = RNG.normal(size=(1, 8, 8, 3)).astype(np.float32)
+    w = RNG.normal(size=(3, 3, 3, 32)).astype(np.float32)
+    spk, _ = input_layer_conv_lif(jnp.asarray(img), jnp.asarray(w), jnp.zeros(32),
+                                  num_steps=3, interpret=True)
+    assert set(np.unique(np.asarray(spk))) <= {0.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# int4_matmul: W4A16 packed dequant matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(4, 64, 32), (17, 96, 130), (128, 512, 256)])
+def test_int4_matmul_matches_dequant_oracle(m, k, n):
+    x = RNG.normal(size=(m, k)).astype(np.float32)
+    w = RNG.normal(size=(k, n)).astype(np.float32)
+    qt = quantize_int4(jnp.asarray(w), axis=-1)
+    out = w4a16_linear(jnp.asarray(x), qt, interpret=True)
+    ref = int4_matmul_ref(jnp.asarray(x), qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+def test_int4_matmul_batched_input():
+    x = RNG.normal(size=(2, 3, 64)).astype(np.float32)
+    qt = quantize_int4(jnp.asarray(RNG.normal(size=(64, 48)).astype(np.float32)))
+    out = w4a16_linear(jnp.asarray(x), qt, interpret=True)
+    assert out.shape == (2, 3, 48)
+
+
+# ---------------------------------------------------------------------------
+# lif_step: fused elementwise LIF update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8,), (3, 7, 11), (2, 32, 32, 16)])
+def test_lif_update_matches_core(shape):
+    u = RNG.normal(size=shape).astype(np.float32)
+    cur = RNG.normal(size=shape).astype(np.float32)
+    sp = (RNG.random(shape) < 0.3).astype(np.float32)
+    un, sn = lif_update(jnp.asarray(u), jnp.asarray(cur), jnp.asarray(sp), interpret=True)
+    ur, sr = lif_step_ref(jnp.asarray(u), jnp.asarray(cur), jnp.asarray(sp),
+                          beta=0.15, theta=0.5)
+    np.testing.assert_allclose(np.asarray(un), np.asarray(ur), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sn), np.asarray(sr))

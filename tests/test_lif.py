@@ -1,0 +1,74 @@
+"""LIF neuron dynamics (paper Eq. 1-2) unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lif import LIFParams, leaky_integrate, lif_scan, lif_step, spike_surrogate
+
+
+def test_eq1_semantics():
+    """u[t+1] = beta*u[t] + I - s_prev*theta, exactly."""
+    p = LIFParams(beta=0.15, theta=0.5)
+    u = jnp.array([0.2, 0.6, -0.1])
+    cur = jnp.array([0.5, 0.0, 0.3])
+    s_prev = jnp.array([0.0, 1.0, 0.0])
+    u_next, s = lif_step(u, cur, s_prev, p)
+    expect_u = 0.15 * u + cur - s_prev * 0.5
+    np.testing.assert_allclose(np.asarray(u_next), np.asarray(expect_u), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s), (np.asarray(expect_u) > 0.5).astype(np.float32))
+
+
+def test_spike_is_binary_and_thresholded():
+    p = LIFParams()
+    u = jnp.linspace(-2, 2, 101)
+    _, s = lif_step(u, jnp.zeros_like(u), jnp.zeros_like(u), p)
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+
+def test_soft_reset_subtracts_theta():
+    """A neuron that fired has theta subtracted next step (paper's reset)."""
+    p = LIFParams(beta=1.0, theta=0.5)  # no decay to isolate the reset term
+    u0 = jnp.array([0.6])
+    u1, s1 = lif_step(u0, jnp.zeros(1), jnp.zeros(1), p)
+    assert s1[0] == 1.0
+    u2, _ = lif_step(u1, jnp.zeros(1), s1, p)
+    np.testing.assert_allclose(float(u2[0]), float(u1[0]) - 0.5, rtol=1e-6)
+
+
+def test_surrogate_gradient_nonzero_near_threshold():
+    g = jax.grad(lambda u: spike_surrogate(u, 0.5, 25.0).sum())(jnp.array([0.5, 0.49, 10.0]))
+    assert g[0] > 0 and g[1] > 0
+    assert g[2] < g[0]  # far from threshold -> tiny gradient
+
+
+def test_forward_is_exact_heaviside():
+    s = spike_surrogate(jnp.array([0.4999, 0.5001]), 0.5, 25.0)
+    np.testing.assert_array_equal(np.asarray(s), [0.0, 1.0])
+
+
+def test_lif_scan_matches_manual_loop():
+    p = LIFParams(beta=0.3, theta=0.4)
+    currents = jax.random.normal(jax.random.PRNGKey(0), (5, 7)) * 0.5
+    spikes, u_final = lif_scan(currents, p)
+    u = jnp.zeros(7)
+    s = jnp.zeros(7)
+    for t in range(5):
+        u, s = lif_step(u, currents[t], s, p)
+        np.testing.assert_allclose(np.asarray(spikes[t]), np.asarray(s))
+    np.testing.assert_allclose(np.asarray(u_final), np.asarray(u), rtol=1e-6)
+
+
+def test_higher_theta_fewer_spikes():
+    currents = jax.random.uniform(jax.random.PRNGKey(1), (10, 64))
+    lo, _ = lif_scan(currents, LIFParams(theta=0.3))
+    hi, _ = lif_scan(currents, LIFParams(theta=0.9))
+    assert lo.sum() >= hi.sum()
+
+
+def test_leaky_integrate_matches_closed_form():
+    """h[t] = sum_j decay^(t-j) x[j] for scalar decay."""
+    decay = 0.8
+    xs = jnp.ones((4, 1))
+    hs, h_final = leaky_integrate(jnp.asarray(decay), xs)
+    expected = [1.0, 1.8, 2.44, 2.952]
+    np.testing.assert_allclose(np.asarray(hs)[:, 0], expected, rtol=1e-5)

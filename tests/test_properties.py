@@ -1,0 +1,87 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.lif import LIFParams, lif_scan
+from repro.core.quant import dequantize, pack_int4, quantize_int4, unpack_int4
+from repro.core.sparsity import tile_occupancy
+from repro.core.workload import balance_allocation, conv_workload, layer_latencies
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(hnp.arrays(np.int8, hnp.array_shapes(min_dims=2, max_dims=3, max_side=8)
+                  .filter(lambda s: s[-1] % 2 == 0),
+                  elements=st.integers(-8, 7)))
+@settings(**SET)
+def test_pack_unpack_is_identity(q):
+    out = unpack_int4(pack_int4(jnp.asarray(q)), q.shape)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@given(hnp.arrays(np.float32, (8, 6), elements=st.floats(-10, 10, width=32)))
+@settings(**SET)
+def test_quantize_error_bounded_by_half_scale(w):
+    qt = quantize_int4(jnp.asarray(w), axis=-1)
+    back = np.asarray(dequantize(qt))
+    scale = np.asarray(qt.scale).reshape(1, -1)
+    assert np.all(np.abs(w - back) <= scale / 2 + 1e-6)
+
+
+@given(st.floats(0.0, 0.99), st.floats(0.05, 2.0),
+       hnp.arrays(np.float32, (6, 12), elements=st.floats(-2, 2, width=32)))
+@settings(**SET)
+def test_lif_invariants(beta, theta, currents):
+    """Spikes are binary; u stays bounded when inputs are bounded."""
+    spikes, u = lif_scan(jnp.asarray(currents), LIFParams(beta=beta, theta=theta))
+    s = np.asarray(spikes)
+    assert set(np.unique(s)) <= {0.0, 1.0}
+    # geometric bound: |u| <= (max|I| + theta) / (1 - beta)
+    bound = (np.abs(currents).max() + theta) / max(1 - beta, 1e-2) + 1e-3
+    assert np.all(np.abs(np.asarray(u)) <= bound)
+
+
+@given(hnp.arrays(np.float32, (4, 70), elements=st.sampled_from([0.0, 1.0])),
+       st.sampled_from([8, 16, 32]))
+@settings(**SET)
+def test_tile_occupancy_bounds(spikes, tile):
+    occ = float(tile_occupancy(jnp.asarray(spikes), tile))
+    assert 0.0 <= occ <= 1.0
+    dens = float(spikes.mean())
+    if dens == 0:
+        assert occ == 0.0
+    else:
+        assert occ >= dens - 1e-6  # occupancy can only exceed density
+
+
+@given(st.lists(st.integers(100, 10_000), min_size=2, max_size=6),
+       st.integers(0, 30))
+@settings(**SET)
+def test_balance_allocation_invariants(spikes, extra):
+    layers = [conv_workload(f"l{i}", 64, 9, s) for i, s in enumerate(spikes)]
+    budget = len(layers) + extra
+    alloc = balance_allocation(layers, budget)
+    assert sum(alloc) == budget
+    assert all(a >= 1 for a in alloc)
+    # local optimality: moving a core from any layer to the bottleneck
+    # never strictly improves the max latency
+    lat = layer_latencies(layers, alloc)
+    worst = int(np.argmax(lat))
+    for j in range(len(alloc)):
+        if j != worst and alloc[j] > 1:
+            alt = list(alloc)
+            alt[j] -= 1
+            alt[worst] += 1
+            assert layer_latencies(layers, alt).max() >= lat.max() - 1e-12
+
+
+@given(st.integers(1, 4), st.integers(1, 8))
+@settings(**SET)
+def test_direct_code_spike_count_scales_with_T(b, t):
+    from repro.core.coding import direct_code
+    x = jnp.ones((b, 2, 2, 1))
+    assert direct_code(x, t).shape == (t, b, 2, 2, 1)
+    assert float(direct_code(x, t).sum()) == b * 4 * t

@@ -1,0 +1,162 @@
+"""Training substrate: optimizers, schedules, checkpointing, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainLoop
+from repro.train.optim import (adafactor, adamw, apply_updates,
+                               clip_by_global_norm, make_optimizer, sgd)
+from repro.train.schedule import constant, warmup_cosine
+from repro.train.train_step import init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    opt = make_optimizer(name, weight_decay=0.0) if name != "sgd" else sgd(0.9, 0.0)
+    params = {"w": jnp.array([3.0, -2.0]), "m": jnp.ones((4, 4)) * 2}
+    loss_fn = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["m"] ** 2)
+    state = opt.init(params)
+    for _ in range(150):
+        g = jax.grad(loss_fn)(params)
+        upd, state = opt.update(g, state, params, jnp.asarray(0.05))
+        params = apply_updates(params, upd)
+    assert float(loss_fn(params)) < 0.2
+
+
+def test_adafactor_memory_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((128, 256))}
+    state = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(state["s"]))
+    assert n_state == 128 + 256  # vr + vc, not 128*256
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+
+
+def test_schedules():
+    lr = warmup_cosine(1.0, 10, 100, min_ratio=0.1)
+    assert float(lr(0)) < float(lr(9))
+    np.testing.assert_allclose(float(lr(10)), 1.0, rtol=0.1)
+    assert float(lr(99)) < 0.2
+    assert float(constant(0.5)(123)) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t)
+    template = jax.eval_shape(lambda: t)
+    out = ckpt.restore(str(tmp_path), 7, template)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert int(out["step"]) == 7
+
+
+def test_checkpoint_keep_k(tmp_path):
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, _tree(), keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = jax.eval_shape(lambda: {"params": {"w": jnp.zeros((2, 2))},
+                                  "step": jnp.asarray(0, jnp.int32)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_checkpoint_atomic_no_partial_visible(tmp_path):
+    """A stale .tmp dir from a crashed writer is never listed as a step."""
+    ckpt.save(str(tmp_path), 3, _tree())
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp.123"))
+    assert ckpt.all_steps(str(tmp_path)) == [3]
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant loop: crash -> resume -> bit-identical result
+# ---------------------------------------------------------------------------
+
+def _make_training(tmp_path):
+    opt = adamw(weight_decay=0.0)
+    target = jnp.asarray(np.random.default_rng(3).normal(size=(8,)).astype(np.float32))
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] * batch["x"] - batch["y"]) ** 2)
+
+    step = jax.jit(make_train_step(loss_fn, opt, constant(0.05)))
+
+    def make_batch(i):
+        k = jax.random.fold_in(jax.random.PRNGKey(0), i)
+        x = jax.random.normal(k, (8,))
+        return {"x": x, "y": x * target}
+
+    params = {"w": jnp.zeros(8)}
+    state = init_train_state(params, opt)
+    loop = TrainLoop(step, make_batch, ckpt_dir=str(tmp_path), ckpt_every=5,
+                     log_every=100, log_fn=lambda *a: None)
+    return loop, state
+
+
+def test_loss_decreases(tmp_path):
+    loop, state = _make_training(tmp_path / "a")
+    state = loop.run(state, 120)
+    first = loop.history[0][1]["loss"]
+    last = loop.history[-1][1]["loss"]
+    assert last < first * 0.3, (first, last)
+
+
+def test_crash_resume_bit_identical(tmp_path):
+    # uninterrupted run
+    loop1, s1 = _make_training(tmp_path / "clean")
+    final1 = loop1.run(s1, 20)
+
+    # crashed-at-12 run, resumed from the step-10 checkpoint
+    loop2, s2 = _make_training(tmp_path / "crash")
+    with pytest.raises(RuntimeError):
+        loop2.run(s2, 20, fail_at_step=12)
+    template = jax.eval_shape(lambda: s2)
+    restored, start = loop2.maybe_restore(template)
+    assert start == 10
+    final2 = loop2.run(restored, 20, start_step=start)
+
+    for a, b in zip(jax.tree.leaves(final1), jax.tree.leaves(final2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_accumulation_matches_full_batch():
+    """accum_steps microbatching == one big batch (linear loss in batch)."""
+    opt = sgd(momentum=0.0, weight_decay=0.0)
+
+    def loss_fn(params, batch):
+        return jnp.mean((params["w"] * batch["x"] - batch["y"]) ** 2)
+
+    batch = {"x": jnp.arange(8.0) + 1, "y": jnp.ones(8)}
+    s0 = init_train_state({"w": jnp.asarray(2.0)}, opt)
+    s_full, m_full = make_train_step(loss_fn, opt, constant(0.1))(s0, batch)
+    s_acc, m_acc = make_train_step(loss_fn, opt, constant(0.1), accum_steps=4)(s0, batch)
+    np.testing.assert_allclose(float(m_full["loss"]), float(m_acc["loss"]), rtol=1e-6)
+    np.testing.assert_allclose(float(s_full["params"]["w"]), float(s_acc["params"]["w"]),
+                               rtol=1e-5)

@@ -1,0 +1,63 @@
+"""Eq. 3 workload model + balanced core allocation (paper §V-A)."""
+import itertools
+
+import numpy as np
+
+from repro.core.workload import (balance_allocation, conv_workload,
+                                 dense_input_workload, fc_workload,
+                                 latency_overheads, layer_latencies,
+                                 scale_allocation)
+
+
+def _layers():
+    return [
+        dense_input_workload("conv0", 32, 32, 64, 2),
+        conv_workload("conv1", 112, 9, 50_000),
+        conv_workload("conv2", 192, 9, 20_000),
+        fc_workload("fc", 1064, 3_000),
+    ]
+
+
+def test_eq3_values():
+    w = conv_workload("c", 64, 9, 1000)
+    assert w.work == 9 * 64 * 1000
+    f = fc_workload("f", 256, 500)
+    assert f.work == 256 * 500
+
+
+def test_balance_is_optimal_vs_bruteforce():
+    """Greedy water-filling matches exhaustive min-max search (small case)."""
+    layers = _layers()[:3]
+    budget = 9
+    best = None
+    for alloc in itertools.product(range(1, budget), repeat=3):
+        if sum(alloc) != budget:
+            continue
+        t = layer_latencies(layers, alloc).max()
+        if best is None or t < best:
+            best = t
+    greedy = balance_allocation(layers, budget)
+    assert sum(greedy) == budget
+    np.testing.assert_allclose(layer_latencies(layers, greedy).max(), best, rtol=1e-9)
+
+
+def test_overheads_sum_to_one():
+    layers = _layers()
+    alloc = balance_allocation(layers, 20)
+    assert abs(latency_overheads(layers, alloc).sum() - 1.0) < 1e-9
+
+
+def test_perf_scaling_halves_latency():
+    layers = _layers()
+    lw = balance_allocation(layers, 12)
+    perf2 = scale_allocation(lw, 2)
+    t1 = layer_latencies(layers, lw).sum()
+    t2 = layer_latencies(layers, perf2).sum()
+    np.testing.assert_allclose(t2, t1 / 2, rtol=1e-9)
+
+
+def test_more_spikes_more_cores():
+    """The allocator gives more cores to spikier layers (Eq. 3 driven)."""
+    layers = [conv_workload("a", 64, 9, 1_000), conv_workload("b", 64, 9, 100_000)]
+    alloc = balance_allocation(layers, 20)
+    assert alloc[1] > alloc[0]
