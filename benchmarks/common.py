@@ -1,7 +1,20 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Every `emit` both prints the human-readable CSV row and appends a JSON
+record to ``BENCH_results.json`` (repo root, or ``$BENCH_RESULTS``), so the
+perf trajectory is tracked across PRs. `benchmarks.run` aggregates the file
+at the end of a run.
+"""
+import json
+import os
 import time
 
 import jax
+
+RESULTS_PATH = os.environ.get(
+    "BENCH_RESULTS",
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_results.json"),
+)
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
@@ -17,5 +30,46 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str):
+def append_result(record: dict) -> None:
+    """Append one benchmark record to BENCH_results.json (a JSON list)."""
+    try:
+        with open(RESULTS_PATH) as f:
+            data = json.load(f)
+        if not isinstance(data, list):
+            data = []
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = []
+    data.append(record)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+
+
+def emit(name: str, us_per_call: float, derived: str, **metrics):
     print(f"{name},{us_per_call:.1f},{derived}")
+    append_result({
+        "name": name,
+        "us_per_call": round(us_per_call, 1),
+        "derived": derived,
+        "unix_time": int(time.time()),
+        **metrics,
+    })
+
+
+def aggregate(path: str = None) -> dict:
+    """Summarize BENCH_results.json: per benchmark name, the number of
+    recorded runs and the latest median latency."""
+    path = path or RESULTS_PATH
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+    summary = {}
+    for rec in data:
+        if not isinstance(rec, dict) or "name" not in rec:
+            continue
+        entry = summary.setdefault(rec["name"], {"runs": 0, "latest_us": None})
+        entry["runs"] += 1
+        entry["latest_us"] = rec.get("us_per_call")
+    return summary

@@ -1,6 +1,8 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure plus pipeline perf.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; every row is also appended to
+``BENCH_results.json`` so the perf trajectory is tracked across PRs, and the
+run ends with an aggregate summary of that file.
 """
 
 
@@ -8,12 +10,22 @@ def main() -> None:
     print("name,us_per_call,derived")
     from . import fig1_quant_sparsity, table1_resources, fig4_energy
     from . import table2_direct_rate, table3_throughput, roofline
+    from . import hybrid_pipeline
     table1_resources.run()
     fig4_energy.run()
     table2_direct_rate.run()
     table3_throughput.run()
     fig1_quant_sparsity.run()
     roofline.run()
+    hybrid_pipeline.run()
+
+    from .common import RESULTS_PATH, aggregate
+    summary = aggregate()
+    print(f"\n# BENCH_results.json aggregate ({RESULTS_PATH}):")
+    for name, entry in sorted(summary.items()):
+        latest = entry["latest_us"]
+        latest_s = f"{latest:.1f}us" if isinstance(latest, (int, float)) else "-"
+        print(f"#   {name}: runs={entry['runs']} latest={latest_s}")
 
 
 if __name__ == '__main__':

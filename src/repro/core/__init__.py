@@ -22,4 +22,5 @@ from .energy import (
     energy_per_image,
     power_model,
 )
-from .hybrid import HybridPlan, LayerPlan, plan_hybrid
+from .hybrid import (HybridPlan, KernelSpec, LayerPlan, plan_hybrid,
+                     plan_vgg9_inference)

@@ -1,0 +1,7 @@
+"""Tile-shape arithmetic shared by the kernel wrappers and the planner."""
+from __future__ import annotations
+
+
+def round_up(x: int, multiple: int = 128) -> int:
+    """Smallest multiple of `multiple` >= x (lane-width 128 by default)."""
+    return ((x + multiple - 1) // multiple) * multiple

@@ -1,0 +1,11 @@
+"""Distribution utilities (single-host subset).
+
+The model and launch code import sharding/mesh helpers from here so the same
+forward functions run unmodified on one device or a pod. This package
+currently implements the single-host semantics only: no ambient mesh, no-op
+cotangent sharding, replicated parameter/optimizer specs, batch sharding over
+the data axes when a mesh is supplied explicitly. The full distributed
+package (error-feedback gradient compression, multi-device subprocess-tested
+sharding rules — see tests/test_dist.py) is roadmap work.
+"""
+from . import context, sharding  # noqa: F401

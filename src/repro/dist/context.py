@@ -1,0 +1,28 @@
+"""Ambient compute-mesh context.
+
+Model code asks `current_mesh()` whenever it wants to insert sharding
+constraints; launch code installs a mesh for the duration of a step with
+`compute_mesh(mesh)`. Without an installed mesh every sharding helper is a
+no-op, which is exactly the single-device semantics the tests run under.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_dist_mesh", default=None)
+
+
+def current_mesh():
+    """The mesh installed by the innermost `compute_mesh`, or None."""
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def compute_mesh(mesh):
+    """Install `mesh` as the ambient compute mesh for the enclosed scope."""
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)

@@ -1,0 +1,104 @@
+"""Sharding rules (single-host subset).
+
+Every helper degrades to replicated/no-op behavior when axes are absent or
+dims don't divide, so the same call sites work on one CPU device and on a
+mesh. Only the rules the model/launch code actually consults are implemented;
+the full rule set (FSDP experts, ZeRO-1 partitioning that genuinely splits
+states) ships with the distributed package (see ROADMAP open items).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .context import current_mesh
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel mesh axes, outermost first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _repair(axes: Sequence[str | None], shape: Tuple[int, ...], mesh) -> Tuple:
+    """Drop sharding axes that the mesh lacks or that don't divide the dim.
+
+    GSPMD rejects specs whose axis size doesn't divide the dimension; rather
+    than special-casing every call site, rules propose axes and `_repair`
+    keeps only the feasible ones.
+    """
+    out = []
+    for ax, dim in zip(axes, shape):
+        if ax is None or ax not in mesh.axis_names or mesh.shape[ax] <= 1 or dim % mesh.shape[ax]:
+            out.append(None)
+        else:
+            out.append(ax)
+    out.extend([None] * (len(shape) - len(out)))
+    return tuple(out[: len(shape)])
+
+
+def shard_cotangents(tree):
+    """Constrain cotangent shardings to match the primal layout.
+
+    Single-host: identity. On a mesh this pins embedding/period cotangents so
+    the backward pass doesn't replicate them; that constraint is installed by
+    the distributed package.
+    """
+    if current_mesh() is None:
+        return tree
+    return tree
+
+
+def param_specs(shapes, mesh, fsdp_experts: bool = False):
+    """PartitionSpecs for a parameter tree: replicated single-host rules."""
+    del fsdp_experts
+    return jax.tree.map(lambda leaf: P(), shapes)
+
+
+def zero1_opt_specs(opt_shapes, param_part, mesh):
+    """Optimizer-state specs mirroring the parameter partitioning."""
+    del param_part
+    return jax.tree.map(lambda leaf: P(), opt_shapes)
+
+
+def batch_spec(b_specs, mesh):
+    """Shard the leading (batch) dim over the data axes when they divide it."""
+    dp = dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+
+    def spec(leaf):
+        if dp and leaf.shape and leaf.shape[0] % ndp == 0:
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree.map(spec, b_specs)
+
+
+def cache_spec(path, leaf, mesh):
+    """Spec for one decode-cache leaf: batch-sharded over the data axes.
+
+    Stacked period caches are [n_periods, B, ...] (their tree path goes
+    through 'periods'); unstacked tail caches are [B, ...] — the path, not
+    the shape, decides which axis is the batch.
+    """
+    dp = dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    key = jax.tree_util.keystr(path) if path else ""
+    axis = 1 if "periods" in key else 0
+    if (dp and len(leaf.shape) > axis
+            and leaf.shape[axis] % ndp == 0 and leaf.shape[axis] >= ndp):
+        axes = [None] * len(leaf.shape)
+        axes[axis] = dp
+        return P(*axes)
+    return P()
+
+
+def cache_specs(cache_shapes, mesh):
+    """Specs for a whole decode-cache tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(path, leaf, mesh), cache_shapes)

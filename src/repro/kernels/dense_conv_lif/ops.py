@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.tiling import round_up as _round_up
 from ..spike_conv.ref import im2col
 from .dense_conv_lif import dense_conv_lif
 
@@ -53,7 +54,3 @@ def input_layer_conv_lif(
     spikes = spikes[:, :m, :cout].reshape(num_steps, b, h, w, cout)
     u = u[:m, :cout].reshape(b, h, w, cout)
     return spikes, u
-
-
-def _round_up(x: int, multiple: int = 128) -> int:
-    return ((x + multiple - 1) // multiple) * multiple

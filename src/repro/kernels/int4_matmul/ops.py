@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.quant import QTensor
+from ...core.tiling import round_up as _round_up
 from .int4_matmul import int4_matmul
 
 

@@ -6,7 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .lif_step import lif_step_fused
+from ...core.tiling import round_up as _round_up
+from .lif_step import lif_epilogue_fused, lif_step_fused
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "theta", "interpret"))
@@ -42,4 +43,49 @@ def lif_update(
     return (
         u_next.reshape(-1)[:n].reshape(shape),
         s.reshape(-1)[:n].reshape(shape),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "theta", "interpret"))
+def lif_epilogue(
+    u: jax.Array,
+    current: jax.Array,
+    prev_spike: jax.Array,
+    bias: jax.Array,
+    *,
+    beta: float = 0.15,
+    theta: float = 0.5,
+    interpret: bool = False,
+):
+    """Fused conv-epilogue LIF update over channel-major tensors.
+
+    u, current, prev_spike: [..., N]; bias: [N] broadcast over leading dims.
+    Unlike `lif_update` (which flattens away the channel axis), the layout is
+    kept 2D [rows, N] so the per-channel bias rides in the same VMEM pass as
+    decay + soft reset + threshold — the epilogue of the gated spike matmul.
+    """
+    shape = u.shape
+    n = shape[-1]
+    assert bias.shape == (n,), (bias.shape, n)
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+
+    block_c = min(512, _round_up(n, 128))
+    cpad = (-n) % block_c
+    block_r = min(256, ((rows + 7) // 8) * 8)
+    rpad = (-rows) % block_r
+
+    def prep(x):
+        return jnp.pad(x.reshape(rows, n), ((0, rpad), (0, cpad)))
+
+    u2, i2, s2 = prep(u), prep(current), prep(prev_spike)
+    b2 = jnp.pad(bias.astype(u.dtype), (0, cpad)).reshape(1, -1)
+    u_next, s = lif_epilogue_fused(
+        u2, i2, s2, b2, beta=beta, theta=theta,
+        block_r=block_r, block_c=block_c, interpret=interpret,
+    )
+    return (
+        u_next[:rows, :n].reshape(shape),
+        s[:rows, :n].reshape(shape),
     )

@@ -22,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_M = 256
 DEFAULT_BLOCK_K = 128
@@ -85,3 +86,79 @@ def spike_matmul(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(patches, weights)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy-mapped variant: the gate moves out of the kernel body
+# ---------------------------------------------------------------------------
+
+def _spike_matmul_mapped_kernel(occ_ref, lidx_ref, x_ref, w_ref, o_ref):
+    """Grid step gated by the *prefetched* occupancy map.
+
+    `occ_ref[i, kk]` decides whether this (block_m x block_k) spike tile
+    contributes. The in-kernel `jnp.any` test of the plain `spike_matmul` is
+    gone: empty tiles skip the MXU dot, and — because the index maps route
+    their loads through `lidx_ref` (the last occupied k-tile) — the VMEM DMA
+    for both the spike tile and the weight tile is elided too (Pallas skips a
+    fetch whose block index equals the previous grid step's).
+    """
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(occ_ref[i, kk] != 0)
+    def _accumulate():
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+
+def spike_matmul_mapped(
+    patches: jax.Array,
+    weights: jax.Array,
+    occupancy: jax.Array,
+    load_idx: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """patches [M, K] @ weights [K, N] -> [M, N] fp32, gated by a precomputed
+    [M/block_m, K/block_k] occupancy map (see ops.occupancy_map).
+
+    `load_idx[i, kk]` must be the largest occupied k-tile index <= kk for row
+    block i (0 when none) — ops.skip_load_indices computes it. It keeps the
+    input/weight block index constant across runs of empty tiles so the
+    pipeline issues no DMA for them.
+    """
+    m, k = patches.shape
+    k2, n = weights.shape
+    assert k == k2, (patches.shape, weights.shape)
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    nm, nk = m // block_m, k // block_k
+    assert occupancy.shape == (nm, nk) == load_idx.shape, (
+        occupancy.shape, load_idx.shape, (nm, nk))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nm, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda i, j, kk, occ, lidx: (i, lidx[i, kk])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda i, j, kk, occ, lidx: (lidx[i, kk], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, kk, occ, lidx: (i, j)),
+    )
+    return pl.pallas_call(
+        _spike_matmul_mapped_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(occupancy, load_idx, patches, weights)

@@ -19,6 +19,7 @@ the Fig. 1 quantization-sparsity measurements).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Tuple
 
 import jax
@@ -195,12 +196,116 @@ def vgg9_loss(params: Dict, batch: Dict, cfg: VGG9Config, *, rng=None) -> jax.Ar
 # Hybrid kernel inference path (dense core + sparse cores)
 # ---------------------------------------------------------------------------
 
-def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
-                      interpret: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Inference via the TPU kernels: dense_conv_lif for the input layer,
-    occupancy-gated spike_conv + fused lif_step for the spiking layers.
+def _stage_plan(cfg: VGG9Config):
+    """[('MP', None) | ('conv', idx>0), ...] — the post-input-layer walk."""
+    plan = []
+    ci = 0
+    for s in cfg.stages:
+        if s == "MP":
+            plan.append(("MP", None))
+        else:
+            if ci > 0:
+                plan.append(("conv", ci))
+            ci += 1
+    return plan
 
-    Direct coding only. Numerics match vgg9_forward (tests assert)."""
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan", "interpret"))
+def _infer_hybrid_fused(params: Dict, images: jax.Array, *, cfg: VGG9Config,
+                        plan, interpret: bool):
+    """The fused serving graph. See vgg9_infer_hybrid for the contract."""
+    from ..kernels.dense_conv_lif.ops import input_layer_conv_lif
+    from ..kernels.lif_step.ops import lif_epilogue
+    from ..kernels.spike_conv.ops import spike_conv2d_mapped
+
+    qp = quantized_view(params, cfg)
+    b = images.shape[0]
+    t = cfg.timesteps
+
+    # Dense core: input layer, conv once + T fused LIF steps (one launch).
+    ks0 = plan.layer("conv0").kernel
+    spikes, _ = input_layer_conv_lif(
+        images, qp["conv0"]["w"], qp["conv0"]["b"],
+        num_steps=t, beta=cfg.beta, theta=cfg.theta,
+        block_m=ks0.block_m, block_n=ks0.block_n, interpret=interpret)
+    counts = {"conv0": jnp.sum(spikes)}
+    stats: Dict[str, Dict[str, jax.Array]] = {}
+
+    def lif_scan_fused(cur_t, bias):
+        """lax.scan of the conv-epilogue LIF over [T, rows, N] currents."""
+        u0 = jnp.zeros_like(cur_t[0])
+
+        def step(carry, cur):
+            u, s_prev = carry
+            u, s = lif_epilogue(u, cur, s_prev, bias, beta=cfg.beta,
+                                theta=cfg.theta, interpret=interpret)
+            return (u, s), s
+
+        _, s_seq = jax.lax.scan(step, (u0, jnp.zeros_like(u0)), cur_t)
+        return s_seq                                     # [T, rows, N]
+
+    # Sparse cores: timesteps folded into the batch — ONE occupancy-mapped
+    # gated matmul launch per layer, then the sequential LIF recurrence.
+    x = spikes.reshape((t * b,) + spikes.shape[2:])      # [T*B, H, W, C]
+    for kind, idx in _stage_plan(cfg):
+        if kind == "MP":
+            x = _maxpool_spikes(x)
+            continue
+        name = f"conv{idx}"
+        ks = plan.layer(name).kernel
+        cur, st = spike_conv2d_mapped(
+            x, qp[name]["w"],
+            block_m=ks.block_m, block_k=ks.block_k, block_n=ks.block_n,
+            gate=ks.gate, interpret=interpret)           # [T*B, H, W, Cout]
+        stats[name] = st
+        _, h, w, cout = cur.shape
+        s_seq = lif_scan_fused(cur.reshape(t, b * h * w, cout), qp[name]["b"])
+        counts[name] = jnp.sum(s_seq)
+        x = s_seq.reshape(t * b, h, w, cout)
+
+    # FC layers (sparse cores with URAM weights in the paper): same folding.
+    flat = x.reshape(t * b, -1)
+    for name in ("fc0", "fc1"):
+        w2d = qp[name]["w"]
+        cur = flat @ w2d                                 # one launch, bias in epilogue
+        s_seq = lif_scan_fused(cur.reshape(t, b, w2d.shape[-1]), qp[name]["b"])
+        counts[name] = jnp.sum(s_seq)
+        flat = s_seq.reshape(t * b, -1)
+
+    group = cfg.population // cfg.num_classes
+    pop = s_seq.sum(0)                                   # [B, P] spike counts over T
+    logits = pop.reshape(b, cfg.num_classes, group).sum(-1) / (t * group)
+    return logits, counts, stats
+
+
+def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
+                      interpret: bool = True, plan=None, return_stats: bool = False):
+    """Fused inference via the TPU kernels: dense_conv_lif for the input
+    layer, occupancy-mapped spike_conv + conv-epilogue LIF for the spiking
+    layers. The whole graph is one jit (static `cfg`/`plan` hashing), with
+    timesteps folded into the batch so every spiking layer issues a single
+    gated-matmul launch instead of T.
+
+    Direct coding only. Numerics match vgg9_forward (tests assert).
+    Returns (logits, counts); with return_stats=True additionally returns the
+    per-layer tile-skip stats of the occupancy-mapped kernels.
+    """
+    assert cfg.coding == "direct"
+    if plan is None:
+        from ..core.hybrid import plan_vgg9_inference
+        plan = plan_vgg9_inference(cfg, images.shape[0])
+    logits, counts, stats = _infer_hybrid_fused(
+        params, images, cfg=cfg, plan=plan, interpret=interpret)
+    if return_stats:
+        return logits, counts, stats
+    return logits, counts
+
+
+def vgg9_infer_hybrid_unfused(params: Dict, images: jax.Array, cfg: VGG9Config, *,
+                              interpret: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """The pre-fusion pipeline: T separate in-kernel-gated spike_conv +
+    lif_step launches per layer from a Python loop. Kept as the benchmark
+    baseline for benchmarks/hybrid_pipeline.py."""
     from ..kernels.dense_conv_lif.ops import input_layer_conv_lif
     from ..kernels.spike_conv.ops import spike_conv2d
     from ..kernels.lif_step.ops import lif_update
@@ -208,7 +313,6 @@ def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
     assert cfg.coding == "direct"
     qp = quantized_view(params, cfg)
     b = images.shape[0]
-    lif = cfg.lif
 
     # Dense core: input layer, conv once + T fused LIF steps
     spikes, _ = input_layer_conv_lif(
@@ -216,19 +320,8 @@ def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
         num_steps=cfg.timesteps, beta=cfg.beta, theta=cfg.theta, interpret=interpret)
     counts = {"conv0": jnp.sum(spikes)}
 
-    # Sparse cores: per layer, per timestep event-driven conv + LIF
-    stage_plan = []
-    ci = 0
-    for s in cfg.stages:
-        if s == "MP":
-            stage_plan.append(("MP", None))
-        else:
-            if ci > 0:
-                stage_plan.append(("conv", ci))
-            ci += 1
-
     layer_in = spikes                                       # [T, B, H, W, C]
-    for kind, idx in stage_plan:
+    for kind, idx in _stage_plan(cfg):
         if kind == "MP":
             layer_in = jax.vmap(_maxpool_spikes)(layer_in)
             continue

@@ -1,11 +1,18 @@
 """Batched serving engine: prefill + greedy decode with KV caches.
 
 A deliberately small but real engine: fixed-slot batching (the production
-pattern for TPU serving — static shapes, no recompilation), jit'd decode
-step shared across requests, optional int4-weight numerics (the paper's
-quantization pipeline generalized to LM serving; on TPU the packed
+pattern for TPU serving — static decode shapes, no per-token recompilation),
+jit'd decode step shared across requests, optional int4-weight numerics (the
+paper's quantization pipeline generalized to LM serving; on TPU the packed
 kernels/int4_matmul path provides the same numerics with 4x less HBM
 traffic — equivalence tested in tests/test_kernels_int4.py).
+
+Prefill runs as one jit'd scan over the whole prompt block (one dispatch
+instead of one per prompt token). The scan length is the batch's max prompt
+length, so each *distinct* prompt-block length compiles once (the scan body
+is compiled once regardless of length); production callers should bucket
+prompt lengths. Greedy-decode numerics are identical to stepping token by
+token (tests assert).
 """
 from __future__ import annotations
 
@@ -45,7 +52,26 @@ class ServeEngine:
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return nxt[:, None], cache            # [B, 1] — feeds the next step
 
+        @jax.jit
+        def prefill(params, cache, toks):
+            """Chunked teacher-forced prefill: one jit'd scan over the whole
+            prompt block (one dispatch instead of plen), decode numerics
+            bit-identical to stepping token by token."""
+
+            def body(cache, xs):
+                tok, pos = xs                     # tok [B], pos scalar
+                logits, cache = tf.decode_step(
+                    params, cache, {"tokens": tok[:, None]}, pos, cfg)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return cache, nxt
+
+            plen = toks.shape[1]
+            positions = jnp.arange(plen, dtype=jnp.int32)
+            cache, nxts = jax.lax.scan(body, cache, (toks.T, positions))
+            return nxts[-1][:, None], cache       # [B, 1] — first decode input
+
         self._step = step
+        self._prefill = prefill
 
     def generate(self, prompts: List[List[int]], num_tokens: int) -> List[List[int]]:
         """Greedy-decode `num_tokens` for a batch of prompts (padded to the
@@ -57,10 +83,9 @@ class ServeEngine:
             toks = toks.at[i, :len(p)].set(jnp.array(p, jnp.int32))
 
         cache = tf.init_cache(self.cfg, self.batch, self.max_seq)
-        # prefill: teacher-forced decode over the prompt (fills the caches)
-        nxt = None
-        for t in range(plen):
-            nxt, cache = self._step(self.params, cache, toks[:, t:t + 1], jnp.int32(t))
+        # prefill: teacher-forced decode over the whole prompt block in a
+        # single jit'd scan (fills the caches; one dispatch, not plen)
+        nxt, cache = self._prefill(self.params, cache, toks)
         out = [list(p) for p in prompts]
         cur = nxt
         for k in range(num_tokens):
