@@ -1,0 +1,141 @@
+"""Unified serving engine benchmark: both runners through one EngineCore.
+
+Measures end-to-end serving throughput (requests/sec through
+submit -> schedule -> run -> poll) and the per-request stats surface for
+both workloads:
+
+* LM: ragged greedy generation — requests/sec, tokens/sec, slot occupancy.
+* SNN: batched spiking-VGG9 inference — requests/sec, mean per-request
+  tile-skip rate per layer, paper-model energy per request, dense-core and
+  sparse-core kernel launches per batch.
+
+Shapes are CPU/interpret friendly (`--smoke` shrinks them further for CI);
+as with the other interpret-mode benchmarks, absolute wall-clock is a
+correctness harness, not a TPU perf signal — the portable signals are the
+skip rates, launch counts and slot occupancy. Emits via `common.emit` into
+``BENCH_results.json``.
+"""
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import vgg9_snn
+from repro.configs.base import ArchConfig
+from repro.kernels.dense_conv_lif import ops as dense_ops
+from repro.kernels.spike_conv import ops as sc_ops
+from repro.models import transformer as tf
+from repro.models.vgg9 import init_vgg9
+from repro.serve.api import EngineConfig
+from repro.serve.core import EngineCore
+from repro.serve.runners.lm import LMRunner
+from repro.serve.runners.snn import SNNRunner
+
+from .common import append_result, emit
+
+
+def _drain(core, payloads, **options):
+    """Submit everything, drain the queue, return (results, seconds)."""
+    ids = [core.submit(p, **options) for p in payloads]
+    t0 = time.perf_counter()
+    results = core.run_until_complete()
+    dt = time.perf_counter() - t0
+    return [results[i] for i in ids], dt
+
+
+def bench_lm(smoke: bool) -> dict:
+    cfg = ArchConfig(name="bench-serve", family="dense", n_layers=2, d_model=32,
+                     n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=61,
+                     dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    slots, tokens = (2, 4) if smoke else (4, 8)
+    runner = LMRunner(cfg, params, max_seq=64)
+
+    rng = np.random.default_rng(0)
+    n_req = slots if smoke else 2 * slots + 1          # forces a partial batch
+    prompts = [list(rng.integers(1, cfg.vocab, size=rng.integers(1, 6)))
+               for _ in range(n_req)]
+    # warm the jit caches on a throwaway core so the measured core's
+    # occupancy/batch stats cover only the timed drain
+    _drain(EngineCore(runner, EngineConfig(slots=slots)), prompts[:1],
+           max_new_tokens=tokens)
+    core = EngineCore(runner, EngineConfig(slots=slots))
+    results, dt = _drain(core, prompts, max_new_tokens=tokens)
+
+    stats = core.stats()
+    rec = {
+        "name": "serve_engine_lm",
+        "requests": len(prompts),
+        "req_per_s": round(len(prompts) / dt, 2),
+        "tok_per_s": round(len(prompts) * tokens / dt, 1),
+        "slot_occupancy": round(stats["slot_occupancy"], 3),
+        "batches_run": stats["batches_run"],
+    }
+    assert all(len(r.outputs) == r.stats["prompt_len"] + tokens for r in results)
+    emit("serve_engine_lm", dt / len(prompts) * 1e6,
+         f"req/s={rec['req_per_s']} occ={rec['slot_occupancy']}",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
+def bench_snn(smoke: bool) -> dict:
+    import dataclasses
+    cfg = vgg9_snn.TINY if smoke else dataclasses.replace(
+        vgg9_snn.TINY, img_hw=32, stages=(16, 24, "MP", 32, 32, "MP"), fc_dim=64)
+    params = init_vgg9(jax.random.PRNGKey(0), cfg)
+    slots = 2 if smoke else 4
+    runner = SNNRunner(cfg, params, interpret=True)
+
+    n_req = slots if smoke else 2 * slots + 1
+    keys = jax.random.split(jax.random.PRNGKey(1), n_req)
+    imgs = [jax.random.uniform(k, (cfg.img_hw, cfg.img_hw, cfg.in_ch)) for k in keys]
+
+    jax.clear_caches()                                 # count trace-time launches
+    sc_ops.reset_launch_counts()
+    dense_ops.reset_launch_counts()
+    # warm (and trace) the graph on a throwaway core; measured core below
+    _drain(EngineCore(runner, EngineConfig(slots=slots)), imgs[:1])
+    sparse_launches = sc_ops.launch_counts().get("spike_matmul_mapped", 0)
+    dense_launches = dense_ops.launch_counts().get("dense_conv_lif", 0)
+    core = EngineCore(runner, EngineConfig(slots=slots))
+    results, dt = _drain(core, imgs)
+
+    skip = {}
+    for layer in results[0].stats["skip_rate"]:
+        skip[layer] = round(float(np.mean(
+            [r.stats["skip_rate"][layer] for r in results])), 4)
+    stats = core.stats()
+    rec = {
+        "name": "serve_engine_snn",
+        "requests": n_req,
+        "req_per_s": round(n_req / dt, 2),
+        "slot_occupancy": round(stats["slot_occupancy"], 3),
+        "batches_run": stats["batches_run"],
+        "mean_skip_rate": skip,
+        "mean_energy_j": float(np.mean([r.stats["energy_j"] for r in results])),
+        "dense_launches_per_batch": dense_launches,
+        "sparse_launches_per_batch": sparse_launches,
+    }
+    emit("serve_engine_snn", dt / n_req * 1e6,
+         f"req/s={rec['req_per_s']} occ={rec['slot_occupancy']} "
+         f"E={rec['mean_energy_j']:.2e}J",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
+def run(smoke: bool = False) -> dict:
+    lm = bench_lm(smoke)
+    snn = bench_snn(smoke)
+    record = {"name": "serve_engine", "lm": lm, "snn": snn}
+    print("SERVE_ENGINE_JSON " + json.dumps(record, sort_keys=True))
+    append_result(record)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (2 slots, fewer requests)")
+    run(**vars(ap.parse_args()))

@@ -1,7 +1,18 @@
-"""Jitted public wrapper for the dense-core fused conv+LIF (input layer)."""
+"""Jitted public wrapper for the dense-core fused conv+LIF (input layer).
+
+Launch configuration (block_m/block_n) comes from the caller — in the serving
+pipeline that is the layer's `KernelSpec` chosen by
+`core.hybrid.plan_vgg9_inference`, not hard-coded heuristics. Launches are
+counted in ``KERNEL_LAUNCHES`` with the same trace-time semantics as the
+spike_conv counters, and the clamped block shapes of each launch are recorded
+in ``LAUNCH_LOG`` so tests/benchmarks can assert the plan actually drives the
+kernel.
+"""
 from __future__ import annotations
 
+import collections
 import functools
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -10,11 +21,59 @@ from ...core.tiling import round_up as _round_up
 from ..spike_conv.ref import im2col
 from .dense_conv_lif import dense_conv_lif
 
+# name -> number of dense-core launches issued (per trace when jitted).
+KERNEL_LAUNCHES: collections.Counter = collections.Counter()
+# clamped launch configurations, in issue order (cleared with the counter)
+LAUNCH_LOG: List[Dict[str, int]] = []
+
+
+def reset_launch_counts() -> None:
+    KERNEL_LAUNCHES.clear()
+    LAUNCH_LOG.clear()
+
+
+def launch_counts() -> Dict[str, int]:
+    return dict(KERNEL_LAUNCHES)
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("num_steps", "beta", "theta", "block_m", "block_n", "interpret"),
 )
+def _input_layer_conv_lif_impl(
+    image: jax.Array,
+    weights: jax.Array,
+    bias: jax.Array,
+    *,
+    num_steps: int,
+    beta: float,
+    theta: float,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+):
+    b, h, w, cin = image.shape
+    kh, kw, _, cout = weights.shape
+    patches = im2col(image, kh, kw, "SAME")            # [M, K], K = kh*kw*cin
+    w2d = weights.reshape(kh * kw * cin, cout)
+
+    m, k = patches.shape
+    # pad K to a lane multiple, M/N to block multiples
+    kpad = _round_up(k, 128)
+    patches = jnp.pad(patches, ((0, (-m) % block_m), (0, kpad - k)))
+    w2d = jnp.pad(w2d, ((0, kpad - k), (0, (-cout) % block_n)))
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, (-cout) % block_n))
+
+    spikes, u = dense_conv_lif(
+        patches, w2d, bias_p,
+        num_steps=num_steps, beta=beta, theta=theta,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    spikes = spikes[:, :m, :cout].reshape(num_steps, b, h, w, cout)
+    u = u[:m, :cout].reshape(b, h, w, cout)
+    return spikes, u
+
+
 def input_layer_conv_lif(
     image: jax.Array,
     weights: jax.Array,
@@ -31,26 +90,15 @@ def input_layer_conv_lif(
 
     Computes the convolution once (direct coding repeats the image each
     timestep) and runs the T-step LIF recurrence fused in the kernel.
+    Block sizes are clamped to the padded problem size before launch.
     """
-    b, h, w, cin = image.shape
-    kh, kw, _, cout = weights.shape
-    patches = im2col(image, kh, kw, "SAME")            # [M, K], K = kh*kw*cin
-    w2d = weights.reshape(kh * kw * cin, cout)
-
-    m, k = patches.shape
-    block_m = min(block_m, _round_up(m))
+    b, h, w, _ = image.shape
+    cout = weights.shape[-1]
+    block_m = min(block_m, _round_up(b * h * w))
     block_n = min(block_n, _round_up(cout))
-    # pad K to a lane multiple, M/N to block multiples
-    kpad = _round_up(k, 128)
-    patches = jnp.pad(patches, ((0, (-m) % block_m), (0, kpad - k)))
-    w2d = jnp.pad(w2d, ((0, kpad - k), (0, (-cout) % block_n)))
-    bias_p = jnp.pad(bias.astype(jnp.float32), (0, (-cout) % block_n))
-
-    spikes, u = dense_conv_lif(
-        patches, w2d, bias_p,
+    KERNEL_LAUNCHES["dense_conv_lif"] += 1
+    LAUNCH_LOG.append({"block_m": block_m, "block_n": block_n})
+    return _input_layer_conv_lif_impl(
+        image, weights, bias,
         num_steps=num_steps, beta=beta, theta=theta,
-        block_m=block_m, block_n=block_n, interpret=interpret,
-    )
-    spikes = spikes[:, :m, :cout].reshape(num_steps, b, h, w, cout)
-    u = u[:m, :cout].reshape(b, h, w, cout)
-    return spikes, u
+        block_m=block_m, block_n=block_n, interpret=interpret)

@@ -196,6 +196,17 @@ def _spike_conv2d_mapped_impl(
         "tiles_total": tiles_total,
         "tiles_occupied": tiles_occupied,
         "skip_rate": (tiles_total - tiles_occupied) / tiles_total,
+        # raw maps + the clamped tile geometry, so callers (the serving
+        # engine) can attribute tile skips back to individual requests in a
+        # folded [T*B·H·W, K] batch: occ_map at (block_m x block_k) tile
+        # granularity, row_occ at (row x block_k) granularity (who actually
+        # spiked inside a tile that straddles two requests)
+        "occ_map": occ,
+        "row_occ": jnp.any(
+            patches.reshape(patches.shape[0], occ.shape[1], block_k) != 0,
+            axis=2).astype(jnp.int8),
+        "block_m": jnp.int32(block_m),
+        "rows": jnp.int32(m),
     }
     return out.reshape(b, oh, ow, cout), stats
 

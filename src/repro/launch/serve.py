@@ -1,6 +1,7 @@
-"""Serving driver: batched greedy generation with the ServeEngine.
+"""Serving driver: the unified engine over either workload.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --workload lm --arch qwen1.5-4b --tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --workload snn --requests 6 --int4
 """
 from __future__ import annotations
 
@@ -10,31 +11,84 @@ import jax
 
 from ..configs import get_arch
 from ..models import transformer as tf
-from ..serve.engine import ServeEngine
+from ..serve.api import EngineConfig
+from ..serve.core import EngineCore
 from .train import reduce_cfg
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-4b")
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--d-model", type=int, default=64)
-    ap.add_argument("--n-layers", type=int, default=4)
-    ap.add_argument("--vocab", type=int, default=512)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--int4", action="store_true", help="int4-weight numerics")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_lm(args) -> None:
+    from ..serve.runners.lm import LMRunner
 
     cfg = get_arch(args.arch)
     cfg = reduce_cfg(cfg, args).with_(frontend="", n_frontend_tokens=0)
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine(cfg, params, batch_slots=4, max_seq=args.seq,
-                         quant_bits=4 if args.int4 else 0)
-    prompts = [[1, 2, 3], [7, 8], [11], [4, 4, 4]]
-    out = engine.generate(prompts, args.tokens)
-    for i, o in enumerate(out):
-        print(f"req{i}: prompt={prompts[i]} -> {o[len(prompts[i]):]}")
+    runner = LMRunner(cfg, params, max_seq=args.seq,
+                      quant_bits=4 if args.int4 else 0)
+    core = EngineCore(runner, EngineConfig(slots=args.slots))
+
+    rng = jax.random.PRNGKey(args.seed + 1)
+    prompts = []
+    for i in range(args.requests):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        length = int(jax.random.randint(k1, (), 1, 6))
+        prompts.append([int(t) for t in
+                        jax.random.randint(k2, (length,), 1, cfg.vocab)])
+    ids = [core.submit(p, max_new_tokens=args.tokens) for p in prompts]
+    results = core.run_until_complete()
+    for i, rid in enumerate(ids):
+        res = results[rid]
+        print(f"req{rid}: prompt={prompts[i]} -> {res.outputs[len(prompts[i]):]} "
+              f"stats={dict(res.stats)}")
+    print(f"engine: {core.stats()}")
+
+
+def serve_snn(args) -> None:
+    import dataclasses
+
+    from ..configs import vgg9_snn
+    from ..models.vgg9 import init_vgg9
+    from ..serve.runners.snn import SNNRunner
+
+    cfg = vgg9_snn.TINY_INT4 if args.int4 else vgg9_snn.TINY
+    if args.img_hw:
+        cfg = dataclasses.replace(cfg, img_hw=args.img_hw)
+    params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
+    runner = SNNRunner(cfg, params, interpret=True)
+    core = EngineCore(runner, EngineConfig(slots=args.slots))
+
+    keys = jax.random.split(jax.random.PRNGKey(args.seed + 1), args.requests)
+    ids = [core.submit(jax.random.uniform(k, (cfg.img_hw, cfg.img_hw, cfg.in_ch)))
+           for k in keys]
+    results = core.run_until_complete()
+    for rid in ids:
+        res = results[rid]
+        pred = int(res.outputs.argmax())
+        skip = {k: round(v, 3) for k, v in res.stats["skip_rate"].items()}
+        print(f"req{rid}: class={pred} spikes={res.stats['spike_total']:.0f} "
+              f"skip={skip} energy={res.stats['energy_j']:.3e} J")
+    print(f"engine: {core.stats()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "snn"), default="lm")
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--img-hw", type=int, default=0, help="SNN image size override")
+    ap.add_argument("--int4", action="store_true", help="int4-weight numerics")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.workload == "snn":
+        serve_snn(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

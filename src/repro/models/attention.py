@@ -7,9 +7,11 @@ produce an honest memory analysis. Supports GQA (grouped KV heads), RoPE,
 optional QKV bias (qwen1.5), and sliding-window masks (recurrentgemma local
 attention).
 
-Sequence positions are assumed left-aligned and shared across the batch
-(positions derived from iota; no padding mask), the standard training/serving
-layout in this framework.
+Training/prefill positions are left-aligned and shared across the batch
+(positions derived from iota; no padding mask). The decode path additionally
+accepts a per-request position vector, which the serving engine uses for
+ragged prompt lengths (each request rotates/writes/attends at its own
+position — see serve/runners/lm.py).
 """
 from __future__ import annotations
 
@@ -179,33 +181,51 @@ def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int, dtyp
 def attention_decode(
     p: Dict[str, jax.Array], x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array, *,
     n_heads: int, n_kv_heads: int, head_dim: int, rope_theta: float, window: int = 0,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """x: [B, 1, d] new-token activations; pos: scalar int32 current position.
+    """x: [B, 1, d] new-token activations; pos: scalar int32 position shared
+    by the batch, or an int32 [B] vector of per-request positions (ragged
+    serving: each request writes/attends/rotates at its own position).
+
+    active: optional bool [B]; rows with active=False leave their cache slot
+    untouched (the serving engine's ragged prefill masks requests whose
+    prompt is already consumed). The select is applied to the single written
+    slot, not the whole cache.
 
     For window > 0 the cache is a ring buffer of size `window` (cache slot =
     pos % window); otherwise the cache covers max_seq positions.
     """
     b = x.shape[0]
     max_s = cache["k"].shape[1]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_vec = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos  # [B]
+    positions = pos_vec[:, None]                                    # [B, 1]
     q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rope_theta, positions)
 
-    slot = jnp.where(window > 0, pos % max_s, pos) if window > 0 else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    slot = pos_vec % max_s if window > 0 else pos_vec
+    rows = jnp.arange(b)
+    k_upd = k_new[:, 0].astype(cache["k"].dtype)        # [B, KV, hd]
+    v_upd = v_new[:, 0].astype(cache["v"].dtype)
+    if active is not None:
+        keep = active[:, None, None]
+        k_upd = jnp.where(keep, k_upd, cache["k"][rows, slot])
+        v_upd = jnp.where(keep, v_upd, cache["v"][rows, slot])
+    ck = cache["k"].at[rows, slot].set(k_upd)
+    cv = cache["v"].at[rows, slot].set(v_upd)
 
     g = n_heads // n_kv_heads
     qh = q.reshape(b, n_kv_heads, g, head_dim).astype(jnp.float32) / math.sqrt(head_dim)
     sc = jnp.einsum("bkgh,bskh->bkgs", qh, ck.astype(jnp.float32))  # [B,KV,G,S]
-    idx = jnp.arange(max_s)
+    idx = jnp.arange(max_s)[None]                                   # [1, S]
+    pv = pos_vec[:, None]                                           # [B, 1]
     if window > 0:
         # ring buffer: slot i holds absolute position derived from pos
-        abs_pos = jnp.where(idx <= pos % max_s, pos - (pos % max_s) + idx,
-                            pos - (pos % max_s) - max_s + idx)
-        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - max_s)
+        ph = pv % max_s
+        abs_pos = jnp.where(idx <= ph, pv - ph + idx, pv - ph - max_s + idx)
+        valid = (abs_pos >= 0) & (abs_pos <= pv) & (abs_pos > pv - max_s)
     else:
-        valid = idx <= pos
-    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+        valid = idx <= pv                                           # [B, S]
+    sc = jnp.where(valid[:, None, None], sc, NEG_INF)
     w = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", w, cv.astype(jnp.float32))
     out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype) @ p["wo"]

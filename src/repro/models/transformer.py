@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -265,14 +265,22 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Any]:
     return {"periods": periods, "tail": tail}
 
 
+def _freeze_state_rows(new_state, old_state, active: jax.Array):
+    """Keep ``old_state`` rows where ``active`` is False (recurrent-state
+    leaves are [B, ...]; small, so a full select is cheap)."""
+    def sel(n, o):
+        return jnp.where(active.reshape((active.shape[0],) + (1,) * (n.ndim - 1)), n, o)
+    return jax.tree.map(sel, new_state, old_state)
+
+
 def _decode_block(kind: str, p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
-                  cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+                  cfg: ArchConfig, active: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if kind in ("attn_mlp", "attn_moe", "local_attn"):
         window = cfg.window if kind == "local_attn" else 0
         y, cache = attention_decode(
             p["attn"], h, cache, pos, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-            head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=window)
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=window, active=active)
         x = x + y
         h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
         if kind == "attn_moe":
@@ -286,23 +294,42 @@ def _decode_block(kind: str, p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
         else:
             x = x + mlp_apply(p["mlp"], h2, cfg.mlp_act)
     elif kind == "rglru":
+        prev = cache
         y, cache = rglru_block_decode(p["rglru"], h, cache)
         x = x + y
         x = x + mlp_apply(p["mlp"], rmsnorm(x, p["norm2"], cfg.norm_eps), cfg.mlp_act)
+        if active is not None:
+            cache = _freeze_state_rows(cache, prev, active)
     elif kind == "mlstm":
+        prev = cache
         y, cache = mlstm_block_decode(p["mlstm"], h, cache, cfg.n_heads)
         x = x + y
+        if active is not None:
+            cache = _freeze_state_rows(cache, prev, active)
     elif kind == "slstm":
+        prev = cache
         y, cache = slstm_block_decode(p["slstm"], h, cache, cfg.n_heads)
         x = x + y
+        if active is not None:
+            cache = _freeze_state_rows(cache, prev, active)
     else:
         raise ValueError(kind)
     return x, cache
 
 
 def decode_step(params: Dict, cache: Dict, batch: Dict, pos: jax.Array,
-                cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
-    """One-token decode. batch {tokens [B,1]}; pos: scalar int32 position."""
+                cfg: ArchConfig, active: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """One-token decode. batch {tokens [B,1]}; pos: scalar int32 position
+    shared by the batch, or an int32 [B] vector of per-request positions
+    (attention rotates/writes/attends per row; recurrent blocks are
+    position-free).
+
+    active: optional bool [B] per-request cache freeze — rows with
+    active=False advance *no* cache (KV writes or recurrent state). The
+    serving engine's ragged prefill uses this so requests whose prompt has
+    already been fully consumed are not teacher-forced on pad tokens
+    (KV caches mask only the written slot; recurrent state is selected
+    row-wise)."""
     x = params["embed"]["w_tok"][batch["tokens"]]
 
     def period_fn(carry, xs):
@@ -311,14 +338,14 @@ def decode_step(params: Dict, cache: Dict, batch: Dict, pos: jax.Array,
         new_cache = {}
         for si, kind in enumerate(cfg.pattern):
             x, c = _decode_block(kind, slot_params[f"slot{si}"], x,
-                                 slot_cache[f"slot{si}"], pos, cfg)
+                                 slot_cache[f"slot{si}"], pos, cfg, active)
             new_cache[f"slot{si}"] = c
         return x, new_cache
 
     x, new_period_cache = jax.lax.scan(period_fn, x, (params["periods"], cache["periods"]))
     new_tail = []
     for i, kind in enumerate(cfg.tail):
-        x, c = _decode_block(kind, params["tail"][i], x, cache["tail"][i], pos, cfg)
+        x, c = _decode_block(kind, params["tail"][i], x, cache["tail"][i], pos, cfg, active)
         new_tail.append(c)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = _unembed(params, x, cfg)

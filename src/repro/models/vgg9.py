@@ -210,10 +210,12 @@ def _stage_plan(cfg: VGG9Config):
     return plan
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "plan", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "plan", "interpret", "with_stats"))
 def _infer_hybrid_fused(params: Dict, images: jax.Array, *, cfg: VGG9Config,
-                        plan, interpret: bool):
-    """The fused serving graph. See vgg9_infer_hybrid for the contract."""
+                        plan, interpret: bool, with_stats: bool):
+    """The fused serving graph. See vgg9_infer_hybrid for the contract.
+    with_stats is static: the no-stats trace returns an empty stats dict, so
+    XLA drops the occupancy/row maps and per-image reductions entirely."""
     from ..kernels.dense_conv_lif.ops import input_layer_conv_lif
     from ..kernels.lif_step.ops import lif_epilogue
     from ..kernels.spike_conv.ops import spike_conv2d_mapped
@@ -229,7 +231,13 @@ def _infer_hybrid_fused(params: Dict, images: jax.Array, *, cfg: VGG9Config,
         num_steps=t, beta=cfg.beta, theta=cfg.theta,
         block_m=ks0.block_m, block_n=ks0.block_n, interpret=interpret)
     counts = {"conv0": jnp.sum(spikes)}
+    # stats carry per-layer tile-skip measurements *and* per-request spike
+    # counts ([B] vectors) so the serving engine can split the folded batch's
+    # counters back out per request. Spikes are 0/1 floats, so the per-image
+    # sums recombine exactly to the scalar `counts`.
     stats: Dict[str, Dict[str, jax.Array]] = {}
+    if with_stats:
+        stats["conv0"] = {"out_spikes_per_image": spikes.sum(axis=(0, 2, 3, 4))}
 
     def lif_scan_fused(cur_t, bias):
         """lax.scan of the conv-epilogue LIF over [T, rows, N] currents."""
@@ -257,19 +265,30 @@ def _infer_hybrid_fused(params: Dict, images: jax.Array, *, cfg: VGG9Config,
             x, qp[name]["w"],
             block_m=ks.block_m, block_k=ks.block_k, block_n=ks.block_n,
             gate=ks.gate, interpret=interpret)           # [T*B, H, W, Cout]
-        stats[name] = st
         _, h, w, cout = cur.shape
         s_seq = lif_scan_fused(cur.reshape(t, b * h * w, cout), qp[name]["b"])
         counts[name] = jnp.sum(s_seq)
+        if with_stats:
+            stats[name] = dict(
+                st,
+                in_spikes_per_image=x.reshape(t, b, -1).sum(axis=(0, 2)),  # Eq. 3 S
+                out_spikes_per_image=s_seq.reshape(t, b, -1).sum(axis=(0, 2)),
+            )
         x = s_seq.reshape(t * b, h, w, cout)
 
     # FC layers (sparse cores with URAM weights in the paper): same folding.
     flat = x.reshape(t * b, -1)
     for name in ("fc0", "fc1"):
         w2d = qp[name]["w"]
+        in_per_image = flat.reshape(t, b, -1).sum(axis=(0, 2))
         cur = flat @ w2d                                 # one launch, bias in epilogue
         s_seq = lif_scan_fused(cur.reshape(t, b, w2d.shape[-1]), qp[name]["b"])
         counts[name] = jnp.sum(s_seq)
+        if with_stats:
+            stats[name] = {
+                "in_spikes_per_image": in_per_image,
+                "out_spikes_per_image": s_seq.sum(axis=(0, 2)),
+            }
         flat = s_seq.reshape(t * b, -1)
 
     group = cfg.population // cfg.num_classes
@@ -288,14 +307,18 @@ def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
 
     Direct coding only. Numerics match vgg9_forward (tests assert).
     Returns (logits, counts); with return_stats=True additionally returns the
-    per-layer tile-skip stats of the occupancy-mapped kernels.
+    per-layer stats: tile-skip measurements (occupancy map included) of the
+    occupancy-mapped kernels plus per-image input/output spike counts for
+    every layer — the quantities the serving engine splits back out per
+    request.
     """
     assert cfg.coding == "direct"
     if plan is None:
         from ..core.hybrid import plan_vgg9_inference
         plan = plan_vgg9_inference(cfg, images.shape[0])
     logits, counts, stats = _infer_hybrid_fused(
-        params, images, cfg=cfg, plan=plan, interpret=interpret)
+        params, images, cfg=cfg, plan=plan, interpret=interpret,
+        with_stats=return_stats)
     if return_stats:
         return logits, counts, stats
     return logits, counts

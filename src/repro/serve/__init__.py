@@ -1,0 +1,13 @@
+"""Unified serving: one engine core, pluggable LM and SNN runners.
+
+See README.md in this directory for the Request/Result/Runner API.
+"""
+from .api import (EngineConfig, ModelRunner, PAD_REQUEST_ID, QueueFull,
+                  Request, Result)
+from .core import EngineCore
+from .engine import ServeEngine
+
+__all__ = [
+    "EngineConfig", "EngineCore", "ModelRunner", "PAD_REQUEST_ID",
+    "QueueFull", "Request", "Result", "ServeEngine",
+]

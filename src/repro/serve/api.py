@@ -1,0 +1,101 @@
+"""Workload-agnostic serving API: Request/Result dataclasses + runner protocol.
+
+The paper's hybrid architecture is an inference *serving* design: a dense
+core plus sparse event-driven cores fed by a stream of inputs. This module is
+the software seam for that design — one request/result vocabulary shared by
+every workload the engine can serve (today: the unified LM and the spiking
+VGG9), so the scheduler (`serve.core.EngineCore`) never needs to know what a
+payload is.
+
+Sparsity-aware co-design (Aliyev et al., arXiv:2408.14437) requires the
+software stack to surface *per-request* sparsity to the scheduler; `Result`
+therefore carries per-request stats next to the outputs: tile-skip rates of
+the occupancy-mapped kernels, spike counts, and the paper-model energy
+estimate for SNN requests; prompt/decode accounting for LM requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Mapping, Protocol, Sequence, runtime_checkable
+
+# Request id used for the filler requests that pad a batch to the full slot
+# count. Results for pad slots are dropped by the engine, never surfaced.
+PAD_REQUEST_ID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One admitted unit of work.
+
+    payload is workload-defined: a token-id list for the LM runner, an
+    [H, W, C] image for the SNN runner. options carry per-request knobs the
+    runner understands (e.g. ``max_new_tokens`` for the LM).
+    """
+    request_id: int
+    payload: Any
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def is_pad(self) -> bool:
+        return self.request_id < 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    """Outputs *and* per-request stats for one completed request.
+
+    outputs: generated token list (LM) or class logits (SNN).
+    stats:   flat mapping of per-request measurements. SNN results include
+             ``skip_rate`` / ``batch_skip_rate`` (per layer), ``out_spikes``
+             / ``in_spikes`` (per layer), ``spike_total``, and the FPGA-model
+             ``energy_j`` / ``latency_s`` estimate; LM results include
+             ``prompt_len``, ``padded_len``, ``new_tokens``.
+    """
+    request_id: int
+    outputs: Any
+    stats: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Scheduler configuration shared by all workloads.
+
+    slots:     fixed batch width. Every runner invocation sees exactly this
+               many requests (short batches are padded with runner fillers) —
+               the static-shape contract that keeps TPU serving free of
+               per-batch recompilation.
+    max_queue: admission bound; `submit` past it raises ``QueueFull``.
+    """
+    slots: int = 8
+    max_queue: int = 256
+
+
+class QueueFull(RuntimeError):
+    """Raised by `EngineCore.submit` when the admission queue is at capacity."""
+
+
+@runtime_checkable
+class ModelRunner(Protocol):
+    """What a workload must provide to be served by `EngineCore`.
+
+    The engine owns admission, bucketing, slot lifecycle and result routing;
+    the runner owns tensors. ``run`` is handed a batch of exactly
+    ``EngineConfig.slots`` requests whose ``bucket_key`` all match and must
+    return one `Result` per request, in order (pad results included; the
+    engine drops them).
+    """
+
+    def bucket_key(self, request: Request) -> Hashable:
+        """Requests are only batched together when their keys are equal
+        (e.g. padded prompt length + decode budget for the LM, image shape
+        for the SNN): the padding/bucketing contract of the scheduler."""
+        ...
+
+    def filler(self, request: Request) -> Request:
+        """A `PAD_REQUEST_ID` request compatible with ``request``'s bucket,
+        used by the engine to pad short batches to the full slot count."""
+        ...
+
+    def run(self, batch: Sequence[Request]) -> Sequence[Result]:
+        """Execute one fixed-slot batch."""
+        ...

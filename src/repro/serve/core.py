@@ -1,0 +1,150 @@
+"""EngineCore: the one fixed-slot scheduler both workloads share.
+
+Decoupled-processing SNN architectures (Windhager et al., arXiv:2311.14447)
+separate request admission from execution; this module is that split in
+software. `EngineCore` owns the admission queue, bucketed batch formation,
+slot lifecycle and result routing, and delegates tensors to a
+`api.ModelRunner`. The same `submit()` / `poll()` / `run_until_complete()`
+surface serves greedy LM decoding (`runners.lm.LMRunner`) and batched
+spiking-VGG9 inference (`runners.snn.SNNRunner`) — the seam every later
+scaling PR (sharded serving, async admission, multi-backend) plugs into.
+
+Scheduling policy: FIFO with same-bucket batching. A step takes the bucket
+key of the oldest queued request, collects up to ``slots`` queued requests
+with an equal key (preserving queue order for the rest), pads the batch to
+the full slot count with runner fillers, and executes it. Static batch
+shapes mean each distinct bucket compiles once.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, List, Optional
+
+from .api import (EngineConfig, ModelRunner, QueueFull, Request, Result)
+
+
+class _Slot:
+    """One batch lane. Tracks which request occupies it (None = free) and
+    how many requests it has served — the lifecycle the benchmarks report
+    as slot occupancy."""
+
+    __slots__ = ("index", "request_id", "served")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.request_id: Optional[int] = None
+        self.served = 0
+
+    def acquire(self, request_id: int) -> None:
+        assert self.request_id is None, f"slot {self.index} busy"
+        self.request_id = request_id
+
+    def release(self) -> None:
+        if self.request_id is not None:
+            self.served += 1
+        self.request_id = None
+
+
+class EngineCore:
+    """Fixed-slot admission queue + scheduler over a `ModelRunner`."""
+
+    def __init__(self, runner: ModelRunner, config: EngineConfig = EngineConfig()):
+        self.runner = runner
+        self.config = config
+        self.slots = [_Slot(i) for i in range(config.slots)]
+        self._queue: collections.deque[Request] = collections.deque()
+        self._results: Dict[int, Result] = {}
+        self._next_id = 0
+        self._batches_run = 0
+        self._requests_done = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, payload: Any, **options: Any) -> int:
+        """Admit one request; returns its id. Raises `QueueFull` at capacity."""
+        if len(self._queue) >= self.config.max_queue:
+            raise QueueFull(
+                f"admission queue at capacity ({self.config.max_queue})")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(rid, payload, dict(options)))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- results ------------------------------------------------------------
+
+    def poll(self, request_id: int) -> Optional[Result]:
+        """Return (and retire) the result for ``request_id``, or None if it
+        has not completed yet."""
+        return self._results.pop(request_id, None)
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _form_batch(self) -> List[Request]:
+        """FIFO same-bucket batch formation, queue order preserved for the
+        requests left behind."""
+        key = self.runner.bucket_key(self._queue[0])
+        batch: List[Request] = []
+        keep: List[Request] = []
+        while self._queue and len(batch) < self.config.slots:
+            req = self._queue.popleft()
+            if self.runner.bucket_key(req) == key:
+                batch.append(req)
+            else:
+                keep.append(req)
+        self._queue.extendleft(reversed(keep))
+        return batch
+
+    def step(self) -> int:
+        """Run one batch if any work is queued; returns #requests completed."""
+        if not self._queue:
+            return 0
+        batch = self._form_batch()
+        for slot, req in zip(self.slots, batch):
+            slot.acquire(req.request_id)
+        # pad to the full slot count: the runner always sees static shapes
+        while len(batch) < self.config.slots:
+            batch.append(self.runner.filler(batch[0]))
+
+        results = self.runner.run(batch)
+        assert len(results) == self.config.slots, (
+            f"runner returned {len(results)} results for {self.config.slots} slots")
+
+        done = 0
+        for req, res in zip(batch, results):
+            if req.is_pad:
+                continue
+            assert res.request_id == req.request_id, (res.request_id, req.request_id)
+            self._results[res.request_id] = res
+            done += 1
+        for slot in self.slots:
+            slot.release()
+        self._batches_run += 1
+        self._requests_done += done
+        return done
+
+    def run_until_complete(self) -> Dict[int, Result]:
+        """Drain the queue; returns every unretrieved result keyed by id
+        (retiring them from `poll`)."""
+        while self._queue:
+            self.step()
+        out, self._results = self._results, {}
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        served = [s.served for s in self.slots]
+        return {
+            "batches_run": self._batches_run,
+            "requests_done": self._requests_done,
+            "pending": len(self._queue),
+            "slots": self.config.slots,
+            "slot_served": served,
+            # mean fraction of slots doing real work per batch
+            "slot_occupancy": (self._requests_done
+                               / (self._batches_run * self.config.slots)
+                               if self._batches_run else 0.0),
+        }

@@ -1,96 +1,43 @@
-"""Batched serving engine: prefill + greedy decode with KV caches.
+"""Back-compat shim: `ServeEngine` over the unified serving core.
 
-A deliberately small but real engine: fixed-slot batching (the production
-pattern for TPU serving — static decode shapes, no per-token recompilation),
-jit'd decode step shared across requests, optional int4-weight numerics (the
-paper's quantization pipeline generalized to LM serving; on TPU the packed
-kernels/int4_matmul path provides the same numerics with 4x less HBM
-traffic — equivalence tested in tests/test_kernels_int4.py).
-
-Prefill runs as one jit'd scan over the whole prompt block (one dispatch
-instead of one per prompt token). The scan length is the batch's max prompt
-length, so each *distinct* prompt-block length compiles once (the scan body
-is compiled once regardless of length); production callers should bucket
-prompt lengths. Greedy-decode numerics are identical to stepping token by
-token (tests assert).
+The real machinery now lives in `serve.api` (Request/Result/ModelRunner),
+`serve.core` (EngineCore: fixed-slot admission queue + bucketed scheduling)
+and `serve.runners.lm` (prefill-scan + greedy decode, with per-request
+prompt-length masking). This class keeps the seed's constructor and
+``generate`` signature for existing callers/tests and simply routes through
+an `EngineCore` with an `LMRunner`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import List
 
 from ..configs.base import ArchConfig
-from ..core.quant import fake_quant
-from ..models import transformer as tf
-
-
-def _quantized_params(params, bits: int):
-    def walk(path, x):
-        key = jax.tree_util.keystr(path)
-        if x.ndim >= 2 and (".w" in key or "w_" in key) and "norm" not in key:
-            return fake_quant(x, bits, None)
-        return x
-    return jax.tree_util.tree_map_with_path(walk, params)
+from .api import EngineConfig
+from .core import EngineCore
+from .runners.lm import LMRunner
 
 
 class ServeEngine:
-    """Greedy batched generation over the unified LM."""
+    """Greedy batched generation over the unified LM (compat wrapper)."""
 
     def __init__(self, cfg: ArchConfig, params, *, batch_slots: int = 8,
                  max_seq: int = 512, quant_bits: int = 0):
         self.cfg = cfg
         self.batch = batch_slots
         self.max_seq = max_seq
-        self.params = _quantized_params(params, quant_bits) if quant_bits else params
+        self.runner = LMRunner(cfg, params, max_seq=max_seq, quant_bits=quant_bits)
+        self.core = EngineCore(self.runner, EngineConfig(slots=batch_slots))
 
-        @functools.partial(jax.jit, static_argnums=())
-        def step(params, cache, tokens, pos):
-            logits, cache = tf.decode_step(params, cache, {"tokens": tokens}, pos, cfg)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return nxt[:, None], cache            # [B, 1] — feeds the next step
-
-        @jax.jit
-        def prefill(params, cache, toks):
-            """Chunked teacher-forced prefill: one jit'd scan over the whole
-            prompt block (one dispatch instead of plen), decode numerics
-            bit-identical to stepping token by token."""
-
-            def body(cache, xs):
-                tok, pos = xs                     # tok [B], pos scalar
-                logits, cache = tf.decode_step(
-                    params, cache, {"tokens": tok[:, None]}, pos, cfg)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return cache, nxt
-
-            plen = toks.shape[1]
-            positions = jnp.arange(plen, dtype=jnp.int32)
-            cache, nxts = jax.lax.scan(body, cache, (toks.T, positions))
-            return nxts[-1][:, None], cache       # [B, 1] — first decode input
-
-        self._step = step
-        self._prefill = prefill
+    @property
+    def params(self):
+        """The (possibly quantized) parameter view the runner serves with."""
+        return self.runner.params
 
     def generate(self, prompts: List[List[int]], num_tokens: int) -> List[List[int]]:
-        """Greedy-decode `num_tokens` for a batch of prompts (padded to the
-        slot count; prompts consumed teacher-forced during prefill)."""
+        """Greedy-decode `num_tokens` for a batch of prompts. Each prompt is
+        prefilled against its own length (shorter prompts in a ragged batch
+        are no longer teacher-forced on pad zeros)."""
         assert len(prompts) <= self.batch
-        plen = max(len(p) for p in prompts)
-        toks = jnp.zeros((self.batch, plen), jnp.int32)
-        for i, p in enumerate(prompts):
-            toks = toks.at[i, :len(p)].set(jnp.array(p, jnp.int32))
-
-        cache = tf.init_cache(self.cfg, self.batch, self.max_seq)
-        # prefill: teacher-forced decode over the whole prompt block in a
-        # single jit'd scan (fills the caches; one dispatch, not plen)
-        nxt, cache = self._prefill(self.params, cache, toks)
-        out = [list(p) for p in prompts]
-        cur = nxt
-        for k in range(num_tokens):
-            pos = jnp.int32(plen + k)
-            for i in range(len(prompts)):
-                out[i].append(int(cur[i, 0]))
-            cur, cache = self._step(self.params, cache, cur, pos)
-        return out
+        ids = [self.core.submit(p, max_new_tokens=num_tokens) for p in prompts]
+        results = self.core.run_until_complete()
+        return [results[i].outputs for i in ids]

@@ -1,0 +1,5 @@
+"""Pluggable workload runners for the unified serving engine."""
+from .lm import LMRunner
+from .snn import SNNRunner
+
+__all__ = ["LMRunner", "SNNRunner"]

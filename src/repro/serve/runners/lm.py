@@ -1,0 +1,133 @@
+"""LM runner: prefill-scan + greedy decode behind the `ModelRunner` protocol.
+
+This is the old `ServeEngine` hot path refactored into a pluggable runner,
+with the ragged-prompt prefill bug fixed. The seed engine teacher-forced
+*every* request through the batch's max prompt length, so shorter prompts
+consumed pad zeros into their KV caches / recurrent state and started
+decoding from a pad-conditioned distribution. Here the prefill scan carries a
+per-request active mask: a request's caches only advance while the scan
+position is inside its own prompt (`decode_step(..., active=...)` freezes KV
+slots and recurrent state row-wise), its first generated token is captured at
+its own last prompt position, and decode runs with a per-request position
+vector — numerics per request are identical to serving it alone.
+
+Bucketing: prompts are padded to `prompt_bucket` multiples, and the bucket
+key is (padded prompt length, max_new_tokens), so each distinct bucket
+compiles the prefill scan once and batches only compatible requests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Hashable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import ArchConfig
+from ...core.quant import fake_quant
+from ...core.tiling import round_up
+from ...models import transformer as tf
+from ..api import PAD_REQUEST_ID, Request, Result
+
+
+def quantized_lm_params(params, bits: int):
+    """Fake-quant view of the LM weight matrices (norms / biases untouched)."""
+    def walk(path, x):
+        key = jax.tree_util.keystr(path)
+        if x.ndim >= 2 and (".w" in key or "w_" in key) and "norm" not in key:
+            return fake_quant(x, bits, None)
+        return x
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+class LMRunner:
+    """Greedy batched generation over the unified LM (`ModelRunner`)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_seq: int = 512,
+                 quant_bits: int = 0, prompt_bucket: int = 8):
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.prompt_bucket = prompt_bucket
+        self.params = quantized_lm_params(params, quant_bits) if quant_bits else params
+
+        @jax.jit
+        def step(params, cache, tokens, pos_vec):
+            """One greedy decode step at per-request positions [B]."""
+            logits, cache = tf.decode_step(params, cache, {"tokens": tokens},
+                                           pos_vec, cfg)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache            # [B, 1] — feeds the next step
+
+        @jax.jit
+        def prefill(params, cache, toks, lens):
+            """Masked teacher-forced prefill: one jit'd scan over the prompt
+            block. Rows past their own prompt length freeze their caches, and
+            each row's first decode token is read off at its own last prompt
+            position — ragged prompts decode bit-identically to solo runs."""
+
+            def body(carry, xs):
+                cache, first = carry
+                tok, p = xs                       # tok [B], p scalar position
+                logits, cache = tf.decode_step(
+                    params, cache, {"tokens": tok[:, None]}, p, cfg,
+                    active=p < lens)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                first = jnp.where(p == lens - 1, nxt, first)
+                return (cache, first), None
+
+            plen = toks.shape[1]
+            positions = jnp.arange(plen, dtype=jnp.int32)
+            first0 = jnp.zeros((toks.shape[0],), jnp.int32)
+            (cache, first), _ = jax.lax.scan(body, (cache, first0),
+                                             (toks.T, positions))
+            return first[:, None], cache          # [B, 1] — first decode input
+
+        self._step = step
+        self._prefill = prefill
+
+    # -- ModelRunner protocol ------------------------------------------------
+
+    def _padded_len(self, prompt: Sequence[int]) -> int:
+        return round_up(max(len(prompt), 1), self.prompt_bucket)
+
+    def bucket_key(self, request: Request) -> Hashable:
+        return (self._padded_len(request.payload),
+                int(request.options.get("max_new_tokens", 0)))
+
+    def filler(self, request: Request) -> Request:
+        # zero-length prompt: never active in the prefill mask, decode output
+        # discarded by the engine
+        return Request(PAD_REQUEST_ID, [], dict(request.options))
+
+    def run(self, batch: Sequence[Request]) -> List[Result]:
+        prompts = [list(r.payload) for r in batch]
+        num_tokens = int(batch[0].options.get("max_new_tokens", 0))
+        plen = self._padded_len(max(prompts, key=len) if prompts else [0])
+        assert plen + num_tokens <= self.max_seq, (
+            f"prompt bucket {plen} + {num_tokens} new tokens exceeds "
+            f"max_seq {self.max_seq}")
+
+        b = len(batch)
+        toks = jnp.zeros((b, plen), jnp.int32)
+        for i, p in enumerate(prompts):
+            if p:
+                toks = toks.at[i, :len(p)].set(jnp.array(p, jnp.int32))
+        lens = jnp.array([len(p) for p in prompts], jnp.int32)
+
+        cache = tf.init_cache(self.cfg, b, self.max_seq)
+        cur, cache = self._prefill(self.params, cache, toks, lens)
+        out = [list(p) for p in prompts]
+        for k in range(num_tokens):
+            pos_vec = lens + k                   # per-request decode position
+            for i in range(b):
+                out[i].append(int(cur[i, 0]))
+            cur, cache = self._step(self.params, cache, cur, pos_vec)
+
+        return [
+            Result(r.request_id, out[i], stats={
+                "prompt_len": len(prompts[i]),
+                "padded_len": plen,
+                "new_tokens": num_tokens,
+            })
+            for i, r in enumerate(batch)
+        ]

@@ -1,0 +1,154 @@
+"""SNN runner: batched spiking-VGG9 inference behind the `ModelRunner` protocol.
+
+Wraps `models.vgg9.vgg9_infer_hybrid` — the fused dense-core + sparse-core
+serving graph — under a `core.hybrid.plan_vgg9_inference` plan sized to the
+engine's fixed slot count, so every batch reuses one compiled graph. Image
+requests are stacked into the slot batch (zero images fill empty slots; all
+layers are row-independent, so real rows are bit-identical to a direct
+`vgg9_infer_hybrid` call on the same batch), and the fused pipeline's
+occupancy/skip counters are split back out per request:
+
+* spike counts — the per-image input/output sums the fused graph measures
+  ([B] vectors; 0/1 spikes make the split exact);
+* tile-skip rates — each request's rows of the folded [T*B·H·W, K] matmul
+  re-tiled at the layer's block size, i.e. the skip rate the occupancy map
+  would deliver if the request were served alone (a tile straddling two
+  images never bills the silent one);
+* paper-model energy — Eq. 3 workloads built from each request's *measured*
+  input-spike counts, priced with the plan's NC allocation and the FPGA
+  power model (`core.energy.energy_per_image`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.energy import energy_per_image
+from ...core.hybrid import HybridPlan, plan_vgg9_inference
+from ...core.workload import (conv_workload, dense_input_workload, fc_workload)
+from ...models.vgg9 import VGG9Config, conv_names, vgg9_infer_hybrid
+from ..api import PAD_REQUEST_ID, Request, Result
+
+
+def _per_request_skip(row_occ: np.ndarray, block_m: int, rows: int,
+                      rows_per_slice: int, batch: int) -> np.ndarray:
+    """Split a folded layer's occupancy back out per request.
+
+    row_occ: [M_pad, K/bk] 0/1 spike occupancy at (row x k-tile) granularity,
+    rows ordered (t*batch + b)*rows_per_slice + pixel. For each request we
+    gather *its own* rows (in folded order — the order a solo run would fold
+    them) and re-tile them at the layer's block_m: the returned skip rate is
+    the fraction of (block_m x block_k) tiles the occupancy map would skip if
+    the request were served alone with the same kernel plan. This makes the
+    per-request number independent of who shares a straddled tile — a silent
+    request reports exactly 1.0 next to a dense neighbour — which is the
+    intrinsic sparsity signal a co-batching scheduler needs.
+    """
+    kt = row_occ.shape[1]
+    owner = (np.arange(rows) // rows_per_slice) % batch  # folded slice -> request
+    skip = np.zeros(batch)
+    for b in range(batch):
+        rb = row_occ[:rows][owner == b]                  # [T*rows_per_slice, kt]
+        pad = (-len(rb)) % block_m
+        if pad:
+            rb = np.concatenate([rb, np.zeros((pad, kt), rb.dtype)])
+        occ = rb.reshape(-1, block_m, kt).any(axis=1)
+        skip[b] = 1.0 - occ.sum() / occ.size
+    return skip
+
+
+class SNNRunner:
+    """Fixed-slot spiking-VGG9 serving (`ModelRunner`)."""
+
+    def __init__(self, cfg: VGG9Config, params, *, interpret: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.interpret = interpret
+        self._plans: Dict[int, HybridPlan] = {}
+
+    def plan(self, batch: int) -> HybridPlan:
+        """The inference plan for a slot count (cached: plans are static jit
+        arguments, so one plan per batch size means one compiled graph)."""
+        if batch not in self._plans:
+            self._plans[batch] = plan_vgg9_inference(self.cfg, batch)
+        return self._plans[batch]
+
+    # -- ModelRunner protocol ------------------------------------------------
+
+    def bucket_key(self, request: Request) -> Hashable:
+        return tuple(np.shape(request.payload))
+
+    def filler(self, request: Request) -> Request:
+        return Request(PAD_REQUEST_ID, jnp.zeros_like(jnp.asarray(request.payload)))
+
+    def run(self, batch: Sequence[Request]) -> List[Result]:
+        images = jnp.stack([jnp.asarray(r.payload) for r in batch])
+        n = len(batch)
+        plan = self.plan(n)
+        logits, counts, stats = vgg9_infer_hybrid(
+            self.params, images, self.cfg, interpret=self.interpret,
+            plan=plan, return_stats=True)
+
+        logits = np.asarray(logits)
+        batch_skip = {k: float(v["skip_rate"]) for k, v in stats.items()
+                      if "skip_rate" in v}
+        out_spikes = {k: np.asarray(v["out_spikes_per_image"], np.float64)
+                      for k, v in stats.items()}
+        in_spikes = {k: np.asarray(v["in_spikes_per_image"], np.float64)
+                     for k, v in stats.items() if "in_spikes_per_image" in v}
+
+        per_req_skip: Dict[str, np.ndarray] = {}
+        for name, st in stats.items():
+            if "occ_map" not in st:
+                continue
+            ks = plan.layer(name).kernel
+            t = self.cfg.timesteps
+            per_req_skip[name] = _per_request_skip(
+                np.asarray(st["row_occ"]), int(st["block_m"]), int(st["rows"]),
+                rows_per_slice=ks.m // (t * n), batch=n)
+
+        energies = [self._energy_estimate(plan, {k: v[i] for k, v in in_spikes.items()})
+                    for i in range(n)]
+
+        results = []
+        for i, req in enumerate(batch):
+            results.append(Result(req.request_id, logits[i], stats={
+                "skip_rate": {k: float(v[i]) for k, v in per_req_skip.items()},
+                "batch_skip_rate": batch_skip,
+                "out_spikes": {k: float(v[i]) for k, v in out_spikes.items()},
+                "in_spikes": {k: float(v[i]) for k, v in in_spikes.items()},
+                "spike_total": float(sum(v[i] for v in out_spikes.values())),
+                **energies[i],
+            }))
+        return results
+
+    # -- paper-model energy --------------------------------------------------
+
+    def _energy_estimate(self, plan: HybridPlan, in_spikes: Dict[str, float]) -> Dict[str, float]:
+        """Eq. 3 workloads from one request's measured input spikes, priced
+        with the plan's NC allocation and the calibrated FPGA power model."""
+        cfg = self.cfg
+        convs = cfg.conv_channels
+        t = cfg.timesteps
+        hw = cfg.img_hw
+        n_mp = sum(1 for s in cfg.stages if s == "MP")
+        flat = (hw // (2 ** n_mp)) ** 2 * convs[-1]
+        wbytes_per = 0.5 if cfg.quant_bits == 4 else 4.0
+        precision = "int4" if cfg.quant_bits == 4 else "fp32"
+
+        workloads = [dense_input_workload("conv0", hw, hw, convs[0], t)]
+        weight_bytes = [9 * cfg.in_ch * convs[0] * wbytes_per]
+        cin = convs[0]
+        for i, name in enumerate(conv_names(cfg)[1:], start=1):
+            workloads.append(conv_workload(name, convs[i], 9, in_spikes[name]))
+            weight_bytes.append(9 * cin * convs[i] * wbytes_per)
+            cin = convs[i]
+        for name, d_in, d_out in (("fc0", flat, cfg.fc_dim),
+                                  ("fc1", cfg.fc_dim, cfg.population)):
+            workloads.append(fc_workload(name, d_out, in_spikes[name]))
+            weight_bytes.append(d_in * d_out * wbytes_per)
+
+        est = energy_per_image(workloads, plan.cores(), weight_bytes, precision)
+        return {"energy_j": est["energy_j"], "latency_s": est["latency_s"]}

@@ -53,6 +53,19 @@ def test_generate_matches_manual_decode():
     assert out == manual
 
 
+def test_ragged_prompts_match_solo_decode():
+    """Regression: shorter prompts in a ragged batch must decode exactly as
+    if served alone. The seed engine teacher-forced them on pad zeros up to
+    the batch max prompt length, corrupting their decode state."""
+    params = _params()
+    engine = ServeEngine(CFG, params, batch_slots=4, max_seq=32)
+    prompts = [[1, 2, 3, 4, 5], [7], [9, 9], [3, 1]]   # unequal lengths
+    batched = engine.generate(prompts, 6)
+    for p, got in zip(prompts, batched):
+        solo = ServeEngine(CFG, params, batch_slots=4, max_seq=32).generate([p], 6)[0]
+        assert got == solo, (p, got, solo)
+
+
 def test_int4_serving_quantizes_weights():
     params = _params()
     e16 = ServeEngine(CFG, params, batch_slots=1, max_seq=16)
