@@ -1,19 +1,30 @@
-"""Unified serving engine benchmark: both runners through one EngineCore.
+"""Unified serving engine benchmark: admission policies and schedulers.
 
-Measures end-to-end serving throughput (requests/sec through
-submit -> schedule -> run -> poll) and the per-request stats surface for
-both workloads:
+Two experiments through one `EngineCore`:
 
-* LM: ragged greedy generation — requests/sec, tokens/sec, slot occupancy.
-* SNN: batched spiking-VGG9 inference — requests/sec, mean per-request
-  tile-skip rate per layer, paper-model energy per request, dense-core and
-  sparse-core kernel launches per batch.
+* LM — ragged greedy generation with *mixed decode budgets*: run-to-completion
+  bucketed batching (``admission='batch'``, the PR-2 policy) vs step-level
+  continuous admission (requests join freed KV-cache slots between decode
+  steps). Reports requests/sec, tokens/sec and slot occupancy for both; the
+  occupancy gap is the price of bucketing ragged budgets.
+* SNN — batched spiking-VGG9 inference on a *mixed-sparsity trace*
+  (interleaved near-silent and dense images, tagged by source): FIFO vs the
+  sparsity-aware scheduler, both under continuous admission. Reports req/s,
+  Eq. 3 energy/image — intrinsic (`energy_j`, invariant by construction) and
+  as-served (`served_energy_j`, the request's share of the batch it rode
+  in) — split by class, plus batch purity and the per-layer batch skip
+  rates. Co-batching sparse with sparse is the paper's co-design loop closed
+  in software: the sparse class's served energy drops toward its intrinsic
+  cost instead of averaging with dense stragglers.
 
-Shapes are CPU/interpret friendly (`--smoke` shrinks them further for CI);
+Both schedulers must return bit-identical outputs per request (asserted);
+only composition, latency and energy attribution may differ.
+
+Shapes are CPU/interpret friendly (``--smoke`` shrinks them further for CI);
 as with the other interpret-mode benchmarks, absolute wall-clock is a
 correctness harness, not a TPU perf signal — the portable signals are the
-skip rates, launch counts and slot occupancy. Emits via `common.emit` into
-``BENCH_results.json``.
+skip rates, energy attribution, batch purity and slot occupancy. Emits via
+`common.emit` into ``BENCH_results.json``.
 """
 import argparse
 import json
@@ -36,14 +47,19 @@ from repro.serve.runners.snn import SNNRunner
 from .common import append_result, emit
 
 
-def _drain(core, payloads, **options):
+def _drain(core, payloads, options=None):
     """Submit everything, drain the queue, return (results, seconds)."""
-    ids = [core.submit(p, **options) for p in payloads]
+    options = options or [{}] * len(payloads)
+    ids = [core.submit(p, **o) for p, o in zip(payloads, options)]
     t0 = time.perf_counter()
     results = core.run_until_complete()
     dt = time.perf_counter() - t0
     return [results[i] for i in ids], dt
 
+
+# ---------------------------------------------------------------------------
+# LM: batch vs continuous admission on mixed decode budgets
+# ---------------------------------------------------------------------------
 
 def bench_lm(smoke: bool) -> dict:
     cfg = ArchConfig(name="bench-serve", family="dense", n_layers=2, d_model=32,
@@ -54,30 +70,71 @@ def bench_lm(smoke: bool) -> dict:
     runner = LMRunner(cfg, params, max_seq=64)
 
     rng = np.random.default_rng(0)
-    n_req = slots if smoke else 2 * slots + 1          # forces a partial batch
+    n_req = slots + 1 if smoke else 2 * slots + 1      # forces partial batches
     prompts = [list(rng.integers(1, cfg.vocab, size=rng.integers(1, 6)))
                for _ in range(n_req)]
-    # warm the jit caches on a throwaway core so the measured core's
-    # occupancy/batch stats cover only the timed drain
-    _drain(EngineCore(runner, EngineConfig(slots=slots)), prompts[:1],
-           max_new_tokens=tokens)
-    core = EngineCore(runner, EngineConfig(slots=slots))
-    results, dt = _drain(core, prompts, max_new_tokens=tokens)
+    # alternating decode budgets: two buckets for batch admission, co-resident
+    # slot-mates under continuous admission
+    options = [{"max_new_tokens": tokens if i % 2 == 0 else 2 * tokens}
+               for i in range(n_req)]
 
-    stats = core.stats()
-    rec = {
-        "name": "serve_engine_lm",
-        "requests": len(prompts),
-        "req_per_s": round(len(prompts) / dt, 2),
-        "tok_per_s": round(len(prompts) * tokens / dt, 1),
-        "slot_occupancy": round(stats["slot_occupancy"], 3),
-        "batches_run": stats["batches_run"],
-    }
-    assert all(len(r.outputs) == r.stats["prompt_len"] + tokens for r in results)
-    emit("serve_engine_lm", dt / len(prompts) * 1e6,
-         f"req/s={rec['req_per_s']} occ={rec['slot_occupancy']}",
+    # warm the jit caches on a throwaway core so the measured cores'
+    # occupancy/step stats cover only the timed drains
+    for admission in ("batch", "continuous"):
+        _drain(EngineCore(runner, EngineConfig(slots=slots, admission=admission)),
+               prompts[:1], [options[0]])
+
+    modes = {}
+    outputs = {}
+    for admission in ("batch", "continuous"):
+        core = EngineCore(runner, EngineConfig(slots=slots, admission=admission))
+        results, dt = _drain(core, prompts, options)
+        stats = core.stats()
+        total_tokens = sum(o["max_new_tokens"] for o in options)
+        modes[admission] = {
+            "req_per_s": round(n_req / dt, 2),
+            "tok_per_s": round(total_tokens / dt, 1),
+            "slot_occupancy": round(stats["slot_occupancy"], 3),
+            "steps_run": stats["steps_run"],
+        }
+        outputs[admission] = [r.outputs for r in results]
+        assert all(len(r.outputs) == r.stats["prompt_len"] + o["max_new_tokens"]
+                   for r, o in zip(results, options))
+    # continuous admission must not change a single token
+    assert outputs["batch"] == outputs["continuous"]
+
+    rec = {"name": "serve_engine_lm", "requests": n_req, "slots": slots,
+           "admission": modes}
+    emit("serve_engine_lm", 0.0,
+         f"occ batch={modes['batch']['slot_occupancy']} "
+         f"continuous={modes['continuous']['slot_occupancy']}",
          **{k: v for k, v in rec.items() if k != "name"})
     return rec
+
+
+# ---------------------------------------------------------------------------
+# SNN: FIFO vs sparsity-aware scheduling on a mixed-sparsity trace
+# ---------------------------------------------------------------------------
+
+def _mixed_trace(cfg, n_req: int):
+    """Interleaved near-silent ('sparse') and dense requests, source-tagged."""
+    keys = jax.random.split(jax.random.PRNGKey(1), n_req)
+    payloads, options = [], []
+    for i, k in enumerate(keys):
+        img = jax.random.uniform(k, (cfg.img_hw, cfg.img_hw, cfg.in_ch))
+        if i % 2 == 0:
+            payloads.append(img * 0.05)        # rarely crosses the LIF threshold
+            options.append({"source": "sparse"})
+        else:
+            payloads.append(img)
+            options.append({"source": "dense"})
+    return payloads, options
+
+
+def _class_mean(results, options, source, field):
+    vals = [r.stats[field] for r, o in zip(results, options)
+            if o["source"] == source]
+    return float(np.mean(vals)) if vals else 0.0
 
 
 def bench_snn(smoke: bool) -> dict:
@@ -87,40 +144,69 @@ def bench_snn(smoke: bool) -> dict:
     params = init_vgg9(jax.random.PRNGKey(0), cfg)
     slots = 2 if smoke else 4
     runner = SNNRunner(cfg, params, interpret=True)
-
-    n_req = slots if smoke else 2 * slots + 1
-    keys = jax.random.split(jax.random.PRNGKey(1), n_req)
-    imgs = [jax.random.uniform(k, (cfg.img_hw, cfg.img_hw, cfg.in_ch)) for k in keys]
+    n_req = 3 * slots
+    payloads, options = _mixed_trace(cfg, n_req)
 
     jax.clear_caches()                                 # count trace-time launches
     sc_ops.reset_launch_counts()
     dense_ops.reset_launch_counts()
-    # warm (and trace) the graph on a throwaway core; measured core below
-    _drain(EngineCore(runner, EngineConfig(slots=slots)), imgs[:1])
+    # warm (and trace) the fused graph on a throwaway core; measured below
+    _drain(EngineCore(runner, EngineConfig(slots=slots)), payloads[:1],
+           options[:1])
     sparse_launches = sc_ops.launch_counts().get("spike_matmul_mapped", 0)
     dense_launches = dense_ops.launch_counts().get("dense_conv_lif", 0)
-    core = EngineCore(runner, EngineConfig(slots=slots))
-    results, dt = _drain(core, imgs)
 
-    skip = {}
-    for layer in results[0].stats["skip_rate"]:
-        skip[layer] = round(float(np.mean(
-            [r.stats["skip_rate"][layer] for r in results])), 4)
-    stats = core.stats()
+    scheds = {}
+    outputs = {}
+    for scheduler in ("fifo", "sparsity"):
+        core = EngineCore(runner, EngineConfig(slots=slots, scheduler=scheduler))
+        results, dt = _drain(core, payloads, options)
+        stats = core.stats()
+        groups = [g for _, g in core.admission_log if len(g) > 1]
+        klass = {r.request_id: o["source"]           # results in submit order
+                 for r, o in zip(results, options)}
+        purity = (sum(len({klass[r] for r in g}) == 1 for g in groups)
+                  / len(groups) if groups else 1.0)
+        skip = {}
+        for layer in results[0].stats["skip_rate"]:
+            skip[layer] = round(float(np.mean(
+                [r.stats["skip_rate"][layer] for r in results])), 4)
+        scheds[scheduler] = {
+            "req_per_s": round(n_req / dt, 2),
+            "slot_occupancy": round(stats["slot_occupancy"], 3),
+            "steps_run": stats["steps_run"],
+            "batch_purity": round(purity, 3),
+            # intrinsic Eq. 3 energy: request served alone — invariant
+            "energy_per_image_j": float(np.mean(
+                [r.stats["energy_j"] for r in results])),
+            # as-served: the request's share of the batch it actually rode in
+            "served_energy_per_image_j": float(np.mean(
+                [r.stats["served_energy_j"] for r in results])),
+            "served_energy_sparse_j": _class_mean(results, options, "sparse",
+                                                  "served_energy_j"),
+            "served_energy_dense_j": _class_mean(results, options, "dense",
+                                                 "served_energy_j"),
+            "mean_skip_rate": skip,
+        }
+        outputs[scheduler] = [np.asarray(r.outputs) for r in results]
+
+    # scheduling may change composition and energy attribution — never logits
+    for a, b in zip(outputs["fifo"], outputs["sparsity"]):
+        np.testing.assert_array_equal(a, b)
+
     rec = {
         "name": "serve_engine_snn",
         "requests": n_req,
-        "req_per_s": round(n_req / dt, 2),
-        "slot_occupancy": round(stats["slot_occupancy"], 3),
-        "batches_run": stats["batches_run"],
-        "mean_skip_rate": skip,
-        "mean_energy_j": float(np.mean([r.stats["energy_j"] for r in results])),
+        "slots": slots,
         "dense_launches_per_batch": dense_launches,
         "sparse_launches_per_batch": sparse_launches,
+        "schedulers": scheds,
     }
-    emit("serve_engine_snn", dt / n_req * 1e6,
-         f"req/s={rec['req_per_s']} occ={rec['slot_occupancy']} "
-         f"E={rec['mean_energy_j']:.2e}J",
+    f, s = scheds["fifo"], scheds["sparsity"]
+    emit("serve_engine_snn", 0.0,
+         f"sparse E/img fifo={f['served_energy_sparse_j']:.2e}J "
+         f"sparsity={s['served_energy_sparse_j']:.2e}J "
+         f"purity {f['batch_purity']}->{s['batch_purity']}",
          **{k: v for k, v in rec.items() if k != "name"})
     return rec
 

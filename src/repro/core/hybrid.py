@@ -152,6 +152,30 @@ def plan_vgg9_inference(cfg, batch: int, *, est_density: float = 0.1,
     selects kernels + block shapes. Spike counts aren't known before running,
     so the Eq. 3 core allocation uses `est_density` spikes per input element —
     the allocation only feeds the FPGA cost model, not the TPU kernels.
+
+    Args:
+        cfg: a `models.vgg9.VGG9Config` (stage list, timesteps, image size,
+            quantization) — must match the params the plan will serve.
+        batch: slot/batch width the fused graph will run at. Plans are
+            per-batch-size: block shapes clamp to the padded M = T*B*H*W
+            geometry, and the plan rides along as a static `jax.jit`
+            argument, so one plan <-> one compiled graph (`SNNRunner.plan`
+            caches them per width).
+        est_density: assumed spikes per input element for the pre-run Eq. 3
+            workload estimate (only prices the FPGA-model NC allocation;
+            serving recomputes energy from *measured* spikes).
+        budget: total NC budget for the lightweight configuration
+            (default: 3 per layer).
+        perf_scale: 1 for the paper's LW configuration, 2/4 for perf^2 /
+            perf^4 scaled allocations.
+
+    Returns:
+        A frozen, hashable `HybridPlan`: one `LayerPlan` per layer (conv0 on
+        the dense path with ``gate=False``; later convs on the sparse path
+        with M tiled at 128 for finest skip granularity; fc layers folded to
+        M = T*B), each carrying its `KernelSpec` launch configuration and
+        FPGA-model core count, plus the paper-style per-layer latency
+        overhead shares.
     """
     t = cfg.timesteps
     convs = cfg.conv_channels

@@ -226,8 +226,31 @@ def spike_conv2d_mapped(
 
     Same numerics as ``spike_conv2d``; the batch axis may carry folded
     timesteps ([T*B, H, W, Cin]) — the fused pipeline's one-launch-per-layer
-    form. ``stats['skip_rate']`` is the fraction of (block_m x block_k) spike
-    tiles whose load + MXU dot the kernel skipped.
+    form.
+
+    The returned stats dict measures this launch's skippable work at two
+    granularities (all shapes refer to the padded im2col matmul
+    [M_pad, K_pad] with the block sizes *after* clamping to the padded
+    problem):
+
+    ``tiles_total`` /      scalar f32 counts of (block_m x block_k) spike
+    ``tiles_occupied``     tiles overall / containing at least one spike.
+    ``skip_rate``          scalar f32 in [0, 1]: fraction of tiles whose
+                           VMEM DMA + MXU dot the kernel skipped,
+                           ``1 - tiles_occupied / tiles_total``.
+    ``occ_map``            int32 [M_pad/block_m, K_pad/block_k]: the
+                           scalar-prefetched occupancy map itself — 1 iff
+                           the tile spikes (all-ones when ``gate=False``).
+    ``row_occ``            int8 [M_pad, K_pad/block_k]: occupancy at
+                           (row x k-tile) granularity — which *rows* inside
+                           a tile actually spiked. Callers that fold many
+                           requests into M (the serving engine) use this to
+                           attribute skips to individual requests: a tile
+                           straddling two images is billed only to the rows
+                           that spiked (see `serve.runners.snn`).
+    ``block_m`` / ``rows`` int32: the clamped M tile size and the *unpadded*
+                           row count M, so row_occ rows past ``rows`` (pure
+                           padding) can be dropped before re-tiling.
     """
     KERNEL_LAUNCHES["spike_matmul_mapped"] += 1
     return _spike_conv2d_mapped_impl(

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --workload lm --arch qwen1.5-4b --tokens 16
     PYTHONPATH=src python -m repro.launch.serve --workload snn --requests 6 --int4
+    PYTHONPATH=src python -m repro.launch.serve --workload snn --scheduler sparsity --mixed-trace
 """
 from __future__ import annotations
 
@@ -16,6 +17,11 @@ from ..serve.core import EngineCore
 from .train import reduce_cfg
 
 
+def engine_config(args) -> EngineConfig:
+    return EngineConfig(slots=args.slots, admission=args.admission,
+                        scheduler=args.scheduler)
+
+
 def serve_lm(args) -> None:
     from ..serve.runners.lm import LMRunner
 
@@ -24,7 +30,7 @@ def serve_lm(args) -> None:
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
     runner = LMRunner(cfg, params, max_seq=args.seq,
                       quant_bits=4 if args.int4 else 0)
-    core = EngineCore(runner, EngineConfig(slots=args.slots))
+    core = EngineCore(runner, engine_config(args))
 
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = []
@@ -54,19 +60,30 @@ def serve_snn(args) -> None:
         cfg = dataclasses.replace(cfg, img_hw=args.img_hw)
     params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
     runner = SNNRunner(cfg, params, interpret=True)
-    core = EngineCore(runner, EngineConfig(slots=args.slots))
+    core = EngineCore(runner, engine_config(args))
 
     keys = jax.random.split(jax.random.PRNGKey(args.seed + 1), args.requests)
-    ids = [core.submit(jax.random.uniform(k, (cfg.img_hw, cfg.img_hw, cfg.in_ch)))
-           for k in keys]
+    shape = (cfg.img_hw, cfg.img_hw, cfg.in_ch)
+    ids = []
+    for i, k in enumerate(keys):
+        img = jax.random.uniform(k, shape)
+        if args.mixed_trace and i % 2 == 0:
+            # alternate near-silent requests: the mixed-sparsity trace the
+            # sparsity-aware scheduler separates from the dense stream
+            img = img * 0.02
+            ids.append(core.submit(img, source="sparse"))
+        else:
+            ids.append(core.submit(img, source="dense"))
     results = core.run_until_complete()
     for rid in ids:
         res = results[rid]
         pred = int(res.outputs.argmax())
         skip = {k: round(v, 3) for k, v in res.stats["skip_rate"].items()}
         print(f"req{rid}: class={pred} spikes={res.stats['spike_total']:.0f} "
-              f"skip={skip} energy={res.stats['energy_j']:.3e} J")
+              f"skip={skip} energy={res.stats['energy_j']:.3e} J "
+              f"served={res.stats['served_energy_j']:.3e} J")
     print(f"engine: {core.stats()}")
+    print(f"admissions: {core.admission_log}")
 
 
 def main():
@@ -82,6 +99,13 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--img-hw", type=int, default=0, help="SNN image size override")
     ap.add_argument("--int4", action="store_true", help="int4-weight numerics")
+    ap.add_argument("--scheduler", choices=("fifo", "sparsity"), default="fifo",
+                    help="batch-composition policy (serve.scheduler)")
+    ap.add_argument("--admission", choices=("continuous", "batch"),
+                    default="continuous",
+                    help="step-level admission vs run-to-completion batching")
+    ap.add_argument("--mixed-trace", action="store_true",
+                    help="SNN: alternate near-silent and dense requests")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -265,6 +265,28 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Any]:
     return {"periods": periods, "tail": tail}
 
 
+def reset_cache_rows(cache: Dict[str, Any], fresh: Dict[str, Any],
+                     keep: jax.Array) -> Dict[str, Any]:
+    """Reset per-request cache rows to their freshly-initialized state.
+
+    cache/fresh: pytrees from `init_cache` (period leaves are
+    [n_periods, B, ...], tail leaves [B, ...]); keep: bool [B] — rows with
+    keep=False are replaced by the corresponding ``fresh`` rows. Continuous
+    serving uses this when a finished request's slot is re-admitted: KV
+    caches are position-masked so stale entries are never attended, but
+    recurrent state (rglru/xlstm) is cumulative and must be re-zeroed for
+    the slot's next occupant.
+    """
+    def sel(axis):
+        def f(c, fr):
+            shape = [1] * c.ndim
+            shape[axis] = keep.shape[0]
+            return jnp.where(keep.reshape(shape), c, fr)
+        return f
+    return {"periods": jax.tree.map(sel(1), cache["periods"], fresh["periods"]),
+            "tail": jax.tree.map(sel(0), cache["tail"], fresh["tail"])}
+
+
 def _freeze_state_rows(new_state, old_state, active: jax.Array):
     """Keep ``old_state`` rows where ``active`` is False (recurrent-state
     leaves are [B, ...]; small, so a full select is cheap)."""

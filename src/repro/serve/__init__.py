@@ -3,11 +3,14 @@
 See README.md in this directory for the Request/Result/Runner API.
 """
 from .api import (EngineConfig, ModelRunner, PAD_REQUEST_ID, QueueFull,
-                  Request, Result)
+                  Request, Result, RunnerSession)
 from .core import EngineCore
 from .engine import ServeEngine
+from .scheduler import (FIFOScheduler, Scheduler, SparsityAwareScheduler,
+                        make_scheduler)
 
 __all__ = [
-    "EngineConfig", "EngineCore", "ModelRunner", "PAD_REQUEST_ID",
-    "QueueFull", "Request", "Result", "ServeEngine",
+    "EngineConfig", "EngineCore", "FIFOScheduler", "ModelRunner",
+    "PAD_REQUEST_ID", "QueueFull", "Request", "Result", "RunnerSession",
+    "Scheduler", "ServeEngine", "SparsityAwareScheduler", "make_scheduler",
 ]

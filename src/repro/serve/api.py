@@ -16,7 +16,8 @@ estimate for SNN requests; prompt/decode accounting for LM requests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Hashable, Mapping, Protocol, Sequence, runtime_checkable
+from typing import (Any, Hashable, Mapping, Optional, Protocol, Sequence,
+                    runtime_checkable)
 
 # Request id used for the filler requests that pad a batch to the full slot
 # count. Results for pad slots are dropped by the engine, never surfaced.
@@ -45,11 +46,45 @@ class Result:
     """Outputs *and* per-request stats for one completed request.
 
     outputs: generated token list (LM) or class logits (SNN).
-    stats:   flat mapping of per-request measurements. SNN results include
-             ``skip_rate`` / ``batch_skip_rate`` (per layer), ``out_spikes``
-             / ``in_spikes`` (per layer), ``spike_total``, and the FPGA-model
-             ``energy_j`` / ``latency_s`` estimate; LM results include
-             ``prompt_len``, ``padded_len``, ``new_tokens``.
+    stats:   flat mapping of per-request measurements.
+
+    SNN result stats (see `runners.snn.SNNRunner`):
+
+    ``skip_rate``        per-layer dict, each value in [0, 1]: the fraction of
+                         (block_m x block_k) spike tiles the occupancy map
+                         would skip if this request were served *alone* with
+                         the same kernel plan (the request's own rows of the
+                         folded [T*B*H*W, K] matmul, re-tiled at the layer's
+                         block_m). The intrinsic sparsity signal schedulers
+                         co-batch on; independent of slot-mates.
+    ``batch_skip_rate``  per-layer dict: the skip rate the kernel actually
+                         measured for the *whole* batch this request was
+                         served in. The gap to ``skip_rate`` is the
+                         co-batching penalty (dense neighbours un-skipping
+                         tiles that straddle requests).
+    ``in_spikes`` /      per-layer dicts: this request's input/output spike
+    ``out_spikes``       *counts* (events over all T timesteps; spikes are
+                         0/1, so the per-request split of the batch totals is
+                         exact). ``spike_total``: sum of ``out_spikes``.
+    ``energy_j``         paper Eq. 3 / §V-C dynamic energy estimate for this
+                         request served alone, in joules — per-layer FPGA
+                         power x per-layer latency from the request's
+                         *measured* input-spike workloads, priced with the
+                         plan's NC allocation. ``latency_s``: the matching
+                         sum-of-layer-latencies estimate, in seconds.
+    ``batch_energy_j`` / Eq. 3 energy (J) / latency (s) of the whole batch
+    ``batch_latency_s``  this request was served in (workloads = batch total
+                         spikes). ``batch_real``: how many non-pad requests
+                         shared the batch. ``served_energy_j`` =
+                         ``batch_energy_j / batch_real``: this request's
+                         share of the energy of the batch it actually rode
+                         in — the quantity a sparsity-aware scheduler
+                         improves for sparse requests by not co-batching
+                         them with dense stragglers.
+
+    LM result stats: ``prompt_len`` (tokens), ``padded_len`` (prompt length
+    after bucket padding; equals ``prompt_len`` under continuous admission,
+    which feeds prompts unpadded), ``new_tokens`` (decode budget).
     """
     request_id: int
     outputs: Any
@@ -65,9 +100,23 @@ class EngineConfig:
                the static-shape contract that keeps TPU serving free of
                per-batch recompilation.
     max_queue: admission bound; `submit` past it raises ``QueueFull``.
+    admission: 'continuous' (default) — step-level admission: each
+               `EngineCore.step` first refills freed slots from the queue,
+               then advances the live runner session one iteration (one
+               decode token for the LM, one fused batch for the SNN), so new
+               requests join between iterations instead of waiting for the
+               current batch to drain. 'batch' — the PR-2 run-to-completion
+               policy: one `step` forms one same-bucket batch and runs it to
+               completion.
+    scheduler: batch-composition policy name, resolved by
+               `scheduler.make_scheduler`: 'fifo' (arrival order) or
+               'sparsity' (co-batch by observed/predicted tile-skip rate,
+               EWMA-learned from per-request `Result` stats).
     """
     slots: int = 8
     max_queue: int = 256
+    admission: str = "continuous"
+    scheduler: str = "fifo"
 
 
 class QueueFull(RuntimeError):
@@ -98,4 +147,43 @@ class ModelRunner(Protocol):
 
     def run(self, batch: Sequence[Request]) -> Sequence[Result]:
         """Execute one fixed-slot batch."""
+        ...
+
+    # -- continuous admission (step-level serving) ---------------------------
+
+    def session_key(self, request: Request) -> Hashable:
+        """Compatibility key for *joining a live session*. Coarser than
+        ``bucket_key``: the LM accepts any prompt/decode budget that fits
+        ``max_seq`` into a running session (slots free and fill
+        independently), so its key is constant; the SNN key is the image
+        shape (one compiled fused graph per shape)."""
+        ...
+
+    def open_session(self, slots: int) -> "RunnerSession":
+        """Start a live fixed-slot session for continuous admission."""
+        ...
+
+
+@runtime_checkable
+class RunnerSession(Protocol):
+    """A live fixed-width batch the engine admits into between iterations.
+
+    The engine drives the session as: ``admit`` requests into free slot
+    indices, then ``step`` to advance every occupied slot by one iteration
+    (one decode token for the LM; one fused T-timestep batch for the SNN).
+    Slots the engine never admitted into are the runner's problem to pad
+    (inactive rows for the LM, zero images for the SNN) — the engine only
+    guarantees it will not reuse a slot index before the session reported
+    the previous occupant finished.
+    """
+
+    def admit(self, slot: int, request: Request) -> Optional[Result]:
+        """Place ``request`` in slot index ``slot``. May complete degenerate
+        requests immediately (e.g. ``max_new_tokens=0``) by returning their
+        `Result`; returns None when the request will run in coming steps."""
+        ...
+
+    def step(self) -> Mapping[int, Result]:
+        """Advance every occupied slot one iteration; returns results for
+        the slots that finished this step (their indices are free again)."""
         ...

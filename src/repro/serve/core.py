@@ -1,26 +1,43 @@
-"""EngineCore: the one fixed-slot scheduler both workloads share.
+"""EngineCore: the one fixed-slot serving core both workloads share.
 
 Decoupled-processing SNN architectures (Windhager et al., arXiv:2311.14447)
 separate request admission from execution; this module is that split in
-software. `EngineCore` owns the admission queue, bucketed batch formation,
-slot lifecycle and result routing, and delegates tensors to a
-`api.ModelRunner`. The same `submit()` / `poll()` / `run_until_complete()`
-surface serves greedy LM decoding (`runners.lm.LMRunner`) and batched
-spiking-VGG9 inference (`runners.snn.SNNRunner`) — the seam every later
-scaling PR (sharded serving, async admission, multi-backend) plugs into.
+software. `EngineCore` owns the admission queue, slot lifecycle and result
+routing, delegates *batch composition* to a pluggable `scheduler.Scheduler`,
+and delegates tensors to an `api.ModelRunner`. The same `submit()` /
+`poll()` / `run_until_complete()` surface serves greedy LM decoding
+(`runners.lm.LMRunner`) and batched spiking-VGG9 inference
+(`runners.snn.SNNRunner`).
 
-Scheduling policy: FIFO with same-bucket batching. A step takes the bucket
-key of the oldest queued request, collects up to ``slots`` queued requests
-with an equal key (preserving queue order for the rest), pads the batch to
-the full slot count with runner fillers, and executes it. Static batch
-shapes mean each distinct bucket compiles once.
+Two admission policies (``EngineConfig.admission``):
+
+* ``'continuous'`` (default) — step-level admission. The engine holds one
+  live `api.RunnerSession` per session key; each `step()` first asks the
+  scheduler to refill freed slots from the queue, then advances the session
+  one iteration. For the LM an iteration is one token — a newly admitted
+  request prefills its prompt token-by-token in the same `decode_step`
+  launches its slot-mates decode in (per-row positions + ``active`` cache
+  masking keep it bit-identical to a solo run), so a freed KV-cache slot
+  never idles while other requests still decode. For the SNN an iteration is
+  one fused T-timestep batch: freed (zero-image padding) slots are refilled
+  with real work every step. Requests with different decode budgets
+  co-reside; nothing waits for a bucket.
+* ``'batch'`` — the PR-2 run-to-completion policy: one `step()` forms one
+  batch (scheduler-composed, same `bucket_key`), pads it to the slot count
+  and runs it to completion. Kept for offline/throughput use and as the
+  reference semantics.
+
+Per-step occupancy/goodput accounting lives on `stats()`; the admission
+history (which requests entered which step) on `admission_log`.
 """
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
-from .api import (EngineConfig, ModelRunner, QueueFull, Request, Result)
+from .api import (EngineConfig, ModelRunner, QueueFull, Request, Result,
+                  RunnerSession)
+from .scheduler import Scheduler, make_scheduler
 
 
 class _Slot:
@@ -46,17 +63,30 @@ class _Slot:
 
 
 class EngineCore:
-    """Fixed-slot admission queue + scheduler over a `ModelRunner`."""
+    """Fixed-slot admission queue + pluggable scheduler over a `ModelRunner`."""
 
-    def __init__(self, runner: ModelRunner, config: EngineConfig = EngineConfig()):
+    def __init__(self, runner: ModelRunner, config: EngineConfig = EngineConfig(),
+                 scheduler: Optional[Scheduler] = None):
+        assert config.admission in ("continuous", "batch"), config.admission
         self.runner = runner
         self.config = config
+        self.scheduler = scheduler if scheduler is not None else make_scheduler(config.scheduler)
         self.slots = [_Slot(i) for i in range(config.slots)]
         self._queue: collections.deque[Request] = collections.deque()
         self._results: Dict[int, Result] = {}
         self._next_id = 0
-        self._batches_run = 0
+        # request_id -> Request for everything currently resident in a slot
+        self._resident: Dict[int, Request] = {}
+        self._session: Optional[RunnerSession] = None
+        self._session_key: Optional[Hashable] = None
+        # accounting
+        self._batches_run = 0          # runner invocations (compute steps)
         self._requests_done = 0
+        self._steps_run = 0            # compute steps (== batches_run today)
+        self._occupied_slot_steps = 0  # sum over steps of occupied slots
+        #: [(step_index, [request_ids admitted])] — the scheduler's decisions,
+        #: in order; tests and benchmarks read batch composition off this.
+        self.admission_log: List[Tuple[int, List[int]]] = []
 
     # -- admission ----------------------------------------------------------
 
@@ -73,6 +103,10 @@ class EngineCore:
     def pending(self) -> int:
         return len(self._queue)
 
+    def in_flight(self) -> int:
+        """Requests currently resident in slots (continuous admission)."""
+        return sum(1 for s in self.slots if s.request_id is not None)
+
     # -- results ------------------------------------------------------------
 
     def poll(self, request_id: int) -> Optional[Result]:
@@ -82,28 +116,118 @@ class EngineCore:
 
     # -- scheduling ---------------------------------------------------------
 
-    def _form_batch(self) -> List[Request]:
-        """FIFO same-bucket batch formation, queue order preserved for the
-        requests left behind."""
-        key = self.runner.bucket_key(self._queue[0])
-        batch: List[Request] = []
-        keep: List[Request] = []
-        while self._queue and len(batch) < self.config.slots:
-            req = self._queue.popleft()
-            if self.runner.bucket_key(req) == key:
-                batch.append(req)
-            else:
-                keep.append(req)
-        self._queue.extendleft(reversed(keep))
-        return batch
-
     def step(self) -> int:
-        """Run one batch if any work is queued; returns #requests completed."""
+        """Advance the engine; returns #requests completed.
+
+        continuous: refill freed slots from the queue, then run one session
+        iteration. batch: form and run one batch to completion.
+        """
+        if self.config.admission == "batch":
+            return self._step_batch()
+        return self._step_continuous()
+
+    def run_until_complete(self) -> Dict[int, Result]:
+        """Drain queue and live slots; returns every unretrieved result
+        keyed by id (retiring them from `poll`)."""
+        while self._queue or self.in_flight():
+            self.step()
+        out, self._results = self._results, {}
+        return out
+
+    def _take_from_queue(self, picks: List[Request], key_fn) -> Hashable:
+        """Validate a scheduler selection and remove it from the queue;
+        returns the selection's (single) session/bucket key."""
+        keys = {key_fn(r) for r in picks}
+        assert len(keys) == 1, f"scheduler mixed keys in one selection: {keys}"
+        chosen = {r.request_id for r in picks}
+        assert len(chosen) == len(picks), "scheduler returned duplicate requests"
+        self._queue = collections.deque(
+            r for r in self._queue if r.request_id not in chosen)
+        return keys.pop()
+
+    def _complete(self, slot: _Slot, result: Result) -> None:
+        req = self._resident.pop(result.request_id)
+        self.scheduler.observe(req, result)
+        self._results[result.request_id] = result
+        slot.release()
+        self._requests_done += 1
+
+    # -- continuous admission ------------------------------------------------
+
+    def _step_continuous(self) -> int:
+        done = 0
+        free = [s for s in self.slots if s.request_id is None]
+        resident = self.config.slots - len(free)
+        if (resident and self._queue
+                and self.runner.session_key(self._queue[0]) != self._session_key):
+            # the *oldest* queued request needs a different session: stop
+            # refilling and let the residents drain so its key takes over —
+            # PR-2's oldest-bucket-first fairness at session granularity.
+            # Without this, a steady same-key stream arriving behind it
+            # would keep the session resident and starve it forever.
+            free = []
+        if self._queue and free:
+            active_key = self._session_key if resident else None
+            picks = self.scheduler.select(
+                tuple(self._queue), len(free),
+                key_fn=self.runner.session_key, active_key=active_key)
+            if picks:
+                key = self._take_from_queue(picks, self.runner.session_key)
+                assert active_key is None or key == active_key, (key, active_key)
+                if resident == 0 and (self._session is None
+                                      or key != self._session_key):
+                    # no live work: safe to swap in a session for the new key
+                    self._session = self.runner.open_session(self.config.slots)
+                    self._session_key = key
+                self.admission_log.append(
+                    (self._steps_run, [r.request_id for r in picks]))
+                for req, slot in zip(picks, free):
+                    slot.acquire(req.request_id)
+                    self._resident[req.request_id] = req
+                    self.scheduler.on_admit(req)
+                    immediate = self._session.admit(slot.index, req)
+                    if immediate is not None:   # degenerate request: 0 work
+                        self._complete(slot, immediate)
+                        done += 1
+            elif resident == 0:
+                raise RuntimeError(
+                    "scheduler admitted nothing into an idle engine with a "
+                    "non-empty queue (Scheduler.select contract: with "
+                    "active_key=None it must pick at least one request)")
+
+        occupied = [s for s in self.slots if s.request_id is not None]
+        if not occupied:
+            return done
+        finished = self._session.step()
+        self._steps_run += 1
+        self._batches_run += 1
+        self._occupied_slot_steps += len(occupied)
+        for idx, res in finished.items():
+            slot = self.slots[idx]
+            assert slot.request_id == res.request_id, (slot.request_id,
+                                                       res.request_id)
+            self._complete(slot, res)
+            done += 1
+        return done
+
+    # -- run-to-completion batching (PR-2 semantics) -------------------------
+
+    def _step_batch(self) -> int:
         if not self._queue:
             return 0
-        batch = self._form_batch()
+        picks = self.scheduler.select(
+            tuple(self._queue), self.config.slots,
+            key_fn=self.runner.bucket_key, active_key=None)
+        assert picks, "Scheduler.select returned nothing for an idle engine"
+        self._take_from_queue(picks, self.runner.bucket_key)
+        self.admission_log.append(
+            (self._steps_run, [r.request_id for r in picks]))
+
+        batch: List[Request] = list(picks)
         for slot, req in zip(self.slots, batch):
             slot.acquire(req.request_id)
+            self._resident[req.request_id] = req
+            self.scheduler.on_admit(req)
         # pad to the full slot count: the runner always sees static shapes
         while len(batch) < self.config.slots:
             batch.append(self.runner.filler(batch[0]))
@@ -113,38 +237,38 @@ class EngineCore:
             f"runner returned {len(results)} results for {self.config.slots} slots")
 
         done = 0
-        for req, res in zip(batch, results):
+        for slot, (req, res) in zip(self.slots, zip(batch, results)):
             if req.is_pad:
                 continue
             assert res.request_id == req.request_id, (res.request_id, req.request_id)
-            self._results[res.request_id] = res
+            self._complete(slot, res)
             done += 1
         for slot in self.slots:
-            slot.release()
+            slot.release()                 # pad slots; real ones already free
         self._batches_run += 1
-        self._requests_done += done
+        self._steps_run += 1
+        self._occupied_slot_steps += len(picks)
         return done
-
-    def run_until_complete(self) -> Dict[int, Result]:
-        """Drain the queue; returns every unretrieved result keyed by id
-        (retiring them from `poll`)."""
-        while self._queue:
-            self.step()
-        out, self._results = self._results, {}
-        return out
 
     # -- introspection ------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
         served = [s.served for s in self.slots]
+        steps = self._steps_run
         return {
             "batches_run": self._batches_run,
+            "steps_run": steps,
             "requests_done": self._requests_done,
             "pending": len(self._queue),
+            "in_flight": self.in_flight(),
             "slots": self.config.slots,
             "slot_served": served,
-            # mean fraction of slots doing real work per batch
-            "slot_occupancy": (self._requests_done
-                               / (self._batches_run * self.config.slots)
-                               if self._batches_run else 0.0),
+            "admission": self.config.admission,
+            "scheduler": getattr(self.scheduler, "name", type(self.scheduler).__name__),
+            # mean fraction of slots holding real work per compute step
+            "slot_occupancy": (self._occupied_slot_steps
+                               / (steps * self.config.slots) if steps else 0.0),
+            # requests retired per compute step (continuous: tokens cost
+            # steps, so LM goodput < 1; SNN completes whole slots per step)
+            "goodput_req_per_step": (self._requests_done / steps if steps else 0.0),
         }

@@ -1,11 +1,13 @@
 """Back-compat shim: `ServeEngine` over the unified serving core.
 
 The real machinery now lives in `serve.api` (Request/Result/ModelRunner),
-`serve.core` (EngineCore: fixed-slot admission queue + bucketed scheduling)
-and `serve.runners.lm` (prefill-scan + greedy decode, with per-request
-prompt-length masking). This class keeps the seed's constructor and
-``generate`` signature for existing callers/tests and simply routes through
-an `EngineCore` with an `LMRunner`.
+`serve.core` (EngineCore: fixed-slot admission queue, pluggable scheduler,
+continuous or run-to-completion admission) and `serve.runners.lm`
+(prefill-scan + greedy decode, with per-request prompt-length masking).
+This class keeps the seed's constructor and ``generate`` signature for
+existing callers/tests and simply routes through an `EngineCore` with an
+`LMRunner` under the default continuous admission (numerics are identical
+either way: every request decodes exactly as if served alone).
 """
 from __future__ import annotations
 

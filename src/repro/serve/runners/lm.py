@@ -11,17 +11,33 @@ slots and recurrent state row-wise), its first generated token is captured at
 its own last prompt position, and decode runs with a per-request position
 vector — numerics per request are identical to serving it alone.
 
-Bucketing: prompts are padded to `prompt_bucket` multiples, and the bucket
-key is (padded prompt length, max_new_tokens), so each distinct bucket
-compiles the prefill scan once and batches only compatible requests.
+Bucketing (``run`` / batch admission): prompts are padded to `prompt_bucket`
+multiples, and the bucket key is (padded prompt length, max_new_tokens), so
+each distinct bucket compiles the prefill scan once and batches only
+compatible requests.
+
+Continuous admission (``open_session``): the same per-row masking machinery,
+generalized from "ragged prompts in one batch" to "requests joining a live
+batch at arbitrary steps". An `_LMSession` holds one KV cache / recurrent
+state of width ``slots``; every session step is ONE `decode_step` in which
+each occupied slot consumes its own next token at its own position — a
+prompt token while prefilling (teacher-forced, argmax discarded until the
+last prompt position), its previously generated token while decoding.
+Free slots ride along with ``active=False`` (caches frozen, outputs
+ignored), and a newly freed slot's recurrent state is reset row-wise before
+reuse (`transformer.reset_cache_rows`; KV entries are position-masked so
+they need no reset). Because `decode_step` is row-independent, a request
+admitted mid-stream sees exactly the launches a solo run would give it —
+bit-identical outputs, which the tests assert.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Hashable, List, Sequence
+from typing import Dict, Hashable, List, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...configs.base import ArchConfig
 from ...core.quant import fake_quant
@@ -59,6 +75,16 @@ class LMRunner:
             return nxt[:, None], cache            # [B, 1] — feeds the next step
 
         @jax.jit
+        def masked_step(params, cache, tokens, pos_vec, active):
+            """One mixed prefill/decode step for a live session: every row
+            consumes its own token at its own position; active=False rows
+            (free slots) freeze their caches."""
+            logits, cache = tf.decode_step(params, cache, {"tokens": tokens},
+                                           pos_vec, cfg, active=active)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, cache                     # [B] greedy picks
+
+        @jax.jit
         def prefill(params, cache, toks, lens):
             """Masked teacher-forced prefill: one jit'd scan over the prompt
             block. Rows past their own prompt length freeze their caches, and
@@ -83,6 +109,7 @@ class LMRunner:
             return first[:, None], cache          # [B, 1] — first decode input
 
         self._step = step
+        self._masked_step = masked_step
         self._prefill = prefill
 
     # -- ModelRunner protocol ------------------------------------------------
@@ -131,3 +158,118 @@ class LMRunner:
             })
             for i, r in enumerate(batch)
         ]
+
+    # -- continuous admission ------------------------------------------------
+
+    def session_key(self, request: Request) -> Hashable:
+        # any prompt/budget that fits max_seq can join a live LM session:
+        # slots prefill/decode independently, so there is nothing to bucket
+        return ("lm", self.max_seq)
+
+    def open_session(self, slots: int) -> "_LMSession":
+        return _LMSession(self, slots)
+
+
+class _LMSession:
+    """A live width-``slots`` decode batch requests join between tokens.
+
+    Per-slot python state (prompt, emitted tokens, position, budget) steers
+    one shared jitted `decode_step` per engine step; the device state is the
+    session-wide KV cache / recurrent state. See the module docstring for
+    the equivalence argument.
+    """
+
+    def __init__(self, runner: LMRunner, slots: int):
+        self.runner = runner
+        self.slots = slots
+        self._fresh = tf.init_cache(runner.cfg, slots, runner.max_seq)
+        self.cache = self._fresh
+        self.req: List[Optional[Request]] = [None] * slots
+        self.prompt: List[List[int]] = [[] for _ in range(slots)]
+        self.out: List[List[int]] = [[] for _ in range(slots)]
+        self.pos = [0] * slots        # next position this slot consumes
+        self.budget = [0] * slots
+        self.next_tok = [0] * slots   # token the slot feeds next step
+        self._stale: set = set()      # slots whose past occupant touched state
+
+    def _result(self, i: int) -> Result:
+        req = self.req[i]
+        return Result(req.request_id, self.out[i], stats={
+            "prompt_len": len(self.prompt[i]),
+            # continuous admission feeds prompts unpadded: no bucket padding
+            "padded_len": len(self.prompt[i]),
+            "new_tokens": self.budget[i],
+        })
+
+    def admit(self, slot: int, request: Request) -> Optional[Result]:
+        assert self.req[slot] is None, f"slot {slot} busy"
+        prompt = [int(t) for t in request.payload]
+        budget = int(request.options.get("max_new_tokens", 0))
+        assert len(prompt) + budget <= self.runner.max_seq, (
+            f"prompt {len(prompt)} + {budget} new tokens exceeds "
+            f"max_seq {self.runner.max_seq}")
+        self.req[slot] = request
+        self.prompt[slot] = prompt
+        self.out[slot] = list(prompt)
+        self.pos[slot] = 0
+        self.budget[slot] = budget
+        if budget == 0:               # nothing to generate: done on arrival
+            res = self._result(slot)
+            self.req[slot] = None
+            return res
+        if prompt:
+            self.next_tok[slot] = prompt[0]
+        else:
+            # batch-path parity: an empty prompt's first "generated" token is
+            # the argmax placeholder 0 the scan prefill leaves behind (its
+            # rows are never active, first0 is zeros); decode continues from
+            # it at position 0
+            self.out[slot].append(0)
+            self.next_tok[slot] = 0
+            if budget <= 1:
+                res = self._result(slot)
+                self.req[slot] = None
+                return res
+        return None
+
+    def step(self) -> Mapping[int, Result]:
+        occupied = [i for i in range(self.slots) if self.req[i] is not None]
+        if not occupied:
+            return {}
+        # re-zero state rows whose previous occupant advanced them, all in
+        # one pass (KV entries are position-masked and would not need this;
+        # rglru/xlstm recurrent state is cumulative and does). Fresh slots
+        # skip it entirely.
+        stale = [i for i in occupied if i in self._stale]
+        if stale:
+            keep = np.ones(self.slots, bool)
+            keep[stale] = False
+            self.cache = tf.reset_cache_rows(self.cache, self._fresh,
+                                             jnp.asarray(keep))
+            self._stale.difference_update(stale)
+        tokens = jnp.asarray([[self.next_tok[i]] for i in range(self.slots)],
+                             jnp.int32)
+        pos_vec = jnp.asarray(self.pos, jnp.int32)
+        active = jnp.asarray([self.req[i] is not None for i in range(self.slots)])
+        nxt, self.cache = self.runner._masked_step(
+            self.runner.params, self.cache, tokens, pos_vec, active)
+
+        finished: Dict[int, Result] = {}
+        picks = None                  # fetched lazily: prefill-only steps skip it
+        for i in occupied:
+            p = self.pos[i]
+            self.pos[i] += 1
+            plen = len(self.prompt[i])
+            if p < plen - 1:          # teacher-forced prefill: argmax discarded
+                self.next_tok[i] = self.prompt[i][p + 1]
+                continue
+            if picks is None:
+                picks = np.asarray(nxt)
+            tok = int(picks[i])       # p == plen-1: first generated token;
+            self.out[i].append(tok)   # p >= plen: steady-state decode
+            self.next_tok[i] = tok
+            if len(self.out[i]) - plen >= self.budget[i]:
+                finished[i] = self._result(i)
+                self.req[i] = None
+                self._stale.add(i)    # its decode steps advanced the state
+        return finished

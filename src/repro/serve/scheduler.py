@@ -1,0 +1,230 @@
+"""Pluggable batch-composition schedulers for `serve.core.EngineCore`.
+
+The paper's co-design loop runs: quantization raises spike sparsity, the
+hybrid dense/sparse hardware turns sparsity into energy savings — but only
+if the work actually arriving at the cores *is* sparse. Sparsity-aware
+co-design (Aliyev et al., arXiv:2408.14437) asks the software stack to
+exploit workload sparsity when scheduling; the Eq. 3 energy model
+(`core.energy`) makes the cost of ignoring it concrete: a batch's latency
+and energy follow its total spike workload, so one dense request co-batched
+with sparse ones drags every slot-mate up to its own cost ("dense stragglers
+poisoning sparse batches").
+
+This module is the seam where that policy plugs in. `EngineCore` delegates
+every admission decision — which queued requests go into the currently free
+slots — to a `Scheduler`:
+
+* `FIFOScheduler`            — arrival order, filtered to the compatible
+                               session key. Reproduces the PR-2 run-to-
+                               completion batching when used with
+                               ``admission='batch'``.
+* `SparsityAwareScheduler`   — co-batches requests by observed/predicted
+                               tile-skip rate. Every completed `Result`
+                               already carries per-request ``skip_rate``
+                               stats (that is why they exist); the scheduler
+                               folds them into EWMAs keyed by the request's
+                               ``source`` option and ranks the queue by
+                               distance to the resident batch's predicted
+                               sparsity.
+
+Schedulers are deliberately workload-agnostic: they see only `Request`
+(payload opaque), the session-compatibility key function, and `Result.stats`.
+LM results carry no skip rates, so the sparsity scheduler degrades to FIFO
+for them — prediction falls back to the prior for every request and the
+ranking sort is stable.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Hashable, List, Optional, Protocol, Sequence, runtime_checkable
+
+from .api import Request, Result
+
+KeyFn = Callable[[Request], Hashable]
+
+
+def observed_skip_rate(result: Result) -> Optional[float]:
+    """Mean per-layer tile-skip rate of a completed request, or None.
+
+    Reads ``Result.stats['skip_rate']`` — the per-request, served-alone skip
+    rates the SNN runner splits out of the folded occupancy maps (fractions
+    in [0, 1], one per sparse layer). Results without the field (e.g. LM
+    requests) yield None and leave the scheduler's state untouched.
+    """
+    rates = result.stats.get("skip_rate")
+    if rates is None:
+        return None
+    if isinstance(rates, dict):
+        if not rates:
+            return None
+        vals = list(rates.values())
+    else:
+        vals = [float(rates)]        # scalar form: 0.0 is a valid observation
+    return float(sum(vals)) / len(vals)
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Admission policy: picks which queued requests enter free slots.
+
+    Contract (enforced by `EngineCore`):
+
+    * ``select`` returns requests drawn from ``queue`` (at most ``free``),
+      all sharing one session key. When ``active_key`` is not None only
+      key-matching requests may be returned (they will join live slots of
+      that session); when it is None the scheduler chooses the key — and
+      MUST return at least one request if the queue is non-empty, so the
+      engine can always make progress.
+    * ``on_admit`` is called for every selected request when it takes a
+      slot; ``observe`` when its `Result` completes. Between the two calls
+      the request is "resident" — the sparsity scheduler anchors admission
+      on the residents' predicted skip rates.
+    """
+
+    def select(self, queue: Sequence[Request], free: int, *,
+               key_fn: KeyFn, active_key: Optional[Hashable]) -> List[Request]:
+        ...
+
+    def on_admit(self, request: Request) -> None:
+        ...
+
+    def observe(self, request: Request, result: Result) -> None:
+        ...
+
+
+class FIFOScheduler:
+    """Arrival order, filtered to one session key (the PR-2 policy)."""
+
+    name = "fifo"
+
+    def select(self, queue: Sequence[Request], free: int, *,
+               key_fn: KeyFn, active_key: Optional[Hashable]) -> List[Request]:
+        if not queue or free <= 0:
+            return []
+        key = active_key if active_key is not None else key_fn(queue[0])
+        return [r for r in queue if key_fn(r) == key][:free]
+
+    def on_admit(self, request: Request) -> None:
+        pass
+
+    def observe(self, request: Request, result: Result) -> None:
+        pass
+
+
+class SparsityAwareScheduler:
+    """Co-batch requests with similar observed/predicted tile-skip rates.
+
+    Prediction, per request (first hit wins):
+
+    1. ``request.options['skip_hint']`` — caller-supplied estimate in [0, 1];
+    2. EWMA of observed skip rates for ``request.options['source']`` (a
+       client/stream tag: requests from one source tend to share sparsity);
+    3. global EWMA over all observed results;
+    4. ``prior`` (no history yet).
+
+    Selection: the seed is the oldest compatible request when the batch is
+    empty (no starvation of whoever waited longest); the anchor is the mean
+    predicted skip of the resident requests, or the seed's own prediction.
+    Remaining slots are filled by predicted-skip distance to the anchor
+    (stable sort: FIFO breaks ties, so workloads without skip stats degrade
+    to FIFO exactly). Requests passed over more than ``patience`` times jump
+    the ranking — an aging escape hatch so dense requests cannot starve
+    behind an endless sparse stream.
+
+    ``spread`` (optional) defers requests whose prediction is farther than
+    ``spread`` from the anchor even when slots are free — trading occupancy
+    for batch purity. Off by default; aging overrides it.
+    """
+
+    name = "sparsity"
+
+    def __init__(self, *, alpha: float = 0.3, prior: float = 0.5,
+                 patience: int = 16, spread: Optional[float] = None):
+        assert 0.0 < alpha <= 1.0, alpha
+        self.alpha = alpha
+        self.prior = prior
+        self.patience = patience
+        self.spread = spread
+        self._by_source: Dict[Hashable, float] = {}
+        self._global: Optional[float] = None
+        self._resident: Dict[int, float] = {}   # request_id -> predicted skip
+        self._passes: Dict[int, int] = {}       # request_id -> times passed over
+
+    # -- prediction ---------------------------------------------------------
+
+    def predict(self, request: Request) -> float:
+        hint = request.options.get("skip_hint")
+        if hint is not None:
+            return float(hint)
+        src = request.options.get("source")
+        if src is not None and src in self._by_source:
+            return self._by_source[src]
+        if self._global is not None:
+            return self._global
+        return self.prior
+
+    def _ewma(self, old: Optional[float], new: float) -> float:
+        return new if old is None else self.alpha * new + (1 - self.alpha) * old
+
+    # -- Scheduler protocol -------------------------------------------------
+
+    def select(self, queue: Sequence[Request], free: int, *,
+               key_fn: KeyFn, active_key: Optional[Hashable]) -> List[Request]:
+        if not queue or free <= 0:
+            return []
+        picked: List[Request] = []
+        if active_key is None:
+            seed = queue[0]                       # oldest request: never starved
+            active_key = key_fn(seed)
+            picked.append(seed)
+            free -= 1
+        compatible = [r for r in queue if key_fn(r) == active_key
+                      and (not picked or r.request_id != picked[0].request_id)]
+
+        anchor_pool = list(self._resident.values()) or [self.predict(p) for p in picked]
+        anchor = sum(anchor_pool) / len(anchor_pool) if anchor_pool else self.prior
+
+        aged = [r for r in compatible
+                if self._passes.get(r.request_id, 0) >= self.patience]
+        fresh = [r for r in compatible
+                 if self._passes.get(r.request_id, 0) < self.patience]
+        fresh.sort(key=lambda r: abs(self.predict(r) - anchor))  # stable: FIFO ties
+        if self.spread is not None:
+            fresh = [r for r in fresh if abs(self.predict(r) - anchor) <= self.spread]
+        ranked = aged + fresh
+
+        picked.extend(ranked[:free])
+        chosen = {r.request_id for r in picked}
+        for r in compatible:
+            if r.request_id not in chosen:
+                self._passes[r.request_id] = self._passes.get(r.request_id, 0) + 1
+        return picked
+
+    def on_admit(self, request: Request) -> None:
+        self._resident[request.request_id] = self.predict(request)
+        self._passes.pop(request.request_id, None)
+
+    def observe(self, request: Request, result: Result) -> None:
+        self._resident.pop(request.request_id, None)
+        skip = observed_skip_rate(result)
+        if skip is None:
+            return
+        self._global = self._ewma(self._global, skip)
+        src = request.options.get("source")
+        if src is not None:
+            self._by_source[src] = self._ewma(self._by_source.get(src), skip)
+
+
+SCHEDULERS = {
+    "fifo": FIFOScheduler,
+    "sparsity": SparsityAwareScheduler,
+}
+
+
+def make_scheduler(name: str, **kwargs) -> Scheduler:
+    """Build a scheduler by `EngineConfig.scheduler` name ('fifo'|'sparsity')."""
+    try:
+        cls = SCHEDULERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; choose from {sorted(SCHEDULERS)}")
+    return cls(**kwargs)

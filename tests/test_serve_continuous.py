@@ -1,0 +1,397 @@
+"""Continuous admission + sparsity-aware scheduling.
+
+Three layers of coverage:
+
+* engine mechanics against a pure-python stub runner (no jax): step-level
+  slot refill, multi-step residency, session-key-gated admission, immediate
+  completion of zero-work requests, exact occupancy/goodput accounting;
+* scheduler policy in isolation: EWMA learning from Result stats, co-batch
+  ranking, FIFO degradation without skip stats, aging anti-starvation;
+* end-to-end equivalence on the real runners: requests admitted mid-stream
+  into a live batch decode/infer bit-identically to solo runs (the
+  correctness contract continuous admission must not break), and the
+  sparsity-aware scheduler separates a synthetic mixed sparse/dense SNN
+  trace into pure batches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9_snn
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.vgg9 import init_vgg9
+from repro.serve.api import EngineConfig, PAD_REQUEST_ID, Request, Result
+from repro.serve.core import EngineCore
+from repro.serve.runners.lm import LMRunner
+from repro.serve.runners.snn import SNNRunner
+from repro.serve.scheduler import (FIFOScheduler, SparsityAwareScheduler,
+                                   make_scheduler, observed_skip_rate)
+
+LM_CFG = ArchConfig(name="t-cont", family="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=61,
+                    dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+SNN_CFG = vgg9_snn.TINY
+
+
+# ---------------------------------------------------------------------------
+# Engine mechanics on a stub runner (no jax)
+# ---------------------------------------------------------------------------
+
+def _stub_result(req):
+    return Result(req.request_id, req.payload.get("key"),
+                  stats={"skip_rate": {"l": req.payload.get("skip", 0.0)}})
+
+
+class StubSession:
+    def __init__(self, slots):
+        self.req = [None] * slots
+        self.left = [0] * slots
+
+    def admit(self, slot, request):
+        assert self.req[slot] is None
+        steps = request.payload.get("steps", 1)
+        if steps == 0:
+            return _stub_result(request)
+        self.req[slot] = request
+        self.left[slot] = steps
+        return None
+
+    def step(self):
+        finished = {}
+        for i, r in enumerate(self.req):
+            if r is None:
+                continue
+            self.left[i] -= 1
+            if self.left[i] <= 0:
+                finished[i] = _stub_result(r)
+                self.req[i] = None
+        return finished
+
+
+class StubRunner:
+    """payload: {'key': session key, 'steps': iterations to finish, 'skip': rate}."""
+
+    def bucket_key(self, request):
+        return request.payload.get("key")
+
+    def session_key(self, request):
+        return request.payload.get("key")
+
+    def filler(self, request):
+        return Request(PAD_REQUEST_ID, dict(request.payload))
+
+    def run(self, batch):
+        return [_stub_result(r) for r in batch]
+
+    def open_session(self, slots):
+        return StubSession(slots)
+
+
+def test_continuous_refills_freed_slots_mid_stream():
+    """A long-running request keeps its slot while short ones cycle through
+    the other — admission happens between iterations, not between batches."""
+    core = EngineCore(StubRunner(), EngineConfig(slots=2))
+    long = core.submit({"key": "a", "steps": 4})
+    s1 = core.submit({"key": "a", "steps": 1})
+    s2 = core.submit({"key": "a", "steps": 1})
+    s3 = core.submit({"key": "a", "steps": 1})
+    assert core.step() == 1 and core.poll(s1) is not None   # long + s1
+    assert core.in_flight() == 1                            # long still resident
+    assert core.step() == 1 and core.poll(s2) is not None   # s2 joined mid-run
+    assert core.step() == 1 and core.poll(s3) is not None
+    assert core.step() == 1 and core.poll(long) is not None
+    stats = core.stats()
+    assert stats["steps_run"] == 4
+    # occupied slot-steps: 2+2+2+1 over 4 steps of 2 slots
+    assert stats["slot_occupancy"] == pytest.approx(7 / 8)
+    assert sum(stats["slot_served"]) == stats["requests_done"] == 4
+
+
+def test_session_key_gates_admission():
+    """Requests with a different session key wait until the live session
+    drains, then get a fresh session — never a mixed batch."""
+    core = EngineCore(StubRunner(), EngineConfig(slots=2))
+    a1 = core.submit({"key": "a", "steps": 2})
+    b1 = core.submit({"key": "b", "steps": 1})
+    a2 = core.submit({"key": "a", "steps": 1})
+    assert core.step() == 1                       # a1+a2 admitted; a2 finishes
+    assert core.poll(a2) is not None and core.poll(b1) is None
+    # a1 still resident: b1 stays blocked on the session key even though a
+    # slot is free
+    assert core.in_flight() == 1
+    assert core.step() == 1 and core.poll(a1) is not None
+    assert core.step() == 1 and core.poll(b1) is not None
+    for step_idx, group in core.admission_log:
+        keys = {"a" if rid in (a1, a2) else "b" for rid in group}
+        assert len(keys) == 1, core.admission_log
+
+
+def test_blocked_head_of_queue_drains_session_not_starves():
+    """A steady same-key stream behind a different-key head must not keep
+    the session resident forever: once the oldest queued request needs a new
+    session, refills stop and the residents drain (PR-2's oldest-bucket-first
+    fairness at session granularity)."""
+    core = EngineCore(StubRunner(), EngineConfig(slots=2))
+    a1 = core.submit({"key": "a", "steps": 2})
+    core.step()                                   # a1 resident, 1 step left
+    b1 = core.submit({"key": "b", "steps": 1})    # head of queue, key b
+    a2 = core.submit({"key": "a", "steps": 1})    # same-key stream behind it
+    core.step()
+    # a2 must NOT have joined past the blocked head; a1 drained instead
+    assert core.in_flight() == 0 and core.poll(a1) is not None
+    assert core.step() == 1 and core.poll(b1) is not None   # b1 runs next
+    assert core.step() == 1 and core.poll(a2) is not None
+
+
+def test_zero_work_requests_complete_on_admission():
+    core = EngineCore(StubRunner(), EngineConfig(slots=2))
+    rid = core.submit({"key": "a", "steps": 0})
+    other = core.submit({"key": "a", "steps": 1})
+    results = core.run_until_complete()
+    assert set(results) == {rid, other}
+    assert core.stats()["requests_done"] == 2
+
+
+def test_batch_admission_still_runs_to_completion():
+    core = EngineCore(StubRunner(), EngineConfig(slots=2, admission="batch"))
+    ids = [core.submit({"key": "a"}) for _ in range(3)]
+    assert core.step() == 2 and core.step() == 1
+    assert core.stats()["batches_run"] == 2
+    assert core.stats()["slot_occupancy"] == pytest.approx(0.75)
+    assert all(core.poll(i) is not None for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy in isolation
+# ---------------------------------------------------------------------------
+
+def _req(rid, **options):
+    return Request(rid, {"key": "k"}, options)
+
+
+def test_sparsity_scheduler_learns_and_groups():
+    sched = SparsityAwareScheduler(alpha=0.5)
+    key_fn = lambda r: "k"
+    sparse, dense = _req(0, source="s"), _req(1, source="d")
+    sched.observe(sparse, Result(0, None, stats={"skip_rate": {"a": 0.9, "b": 1.0}}))
+    sched.observe(dense, Result(1, None, stats={"skip_rate": {"a": 0.1}}))
+    assert sched.predict(_req(2, source="s")) == pytest.approx(0.95)
+    assert sched.predict(_req(3, source="d")) == pytest.approx(0.1)
+    # hint beats history; unknown source falls back to the global EWMA
+    assert sched.predict(_req(4, skip_hint=0.42)) == pytest.approx(0.42)
+    assert sched.predict(_req(5, source="new")) == sched._global
+
+    queue = [_req(10, source="s"), _req(11, source="d"),
+             _req(12, source="s"), _req(13, source="d")]
+    picks = sched.select(queue, 2, key_fn=key_fn, active_key=None)
+    assert [r.request_id for r in picks] == [10, 12]    # seed + nearest skip
+    picks = sched.select([queue[1], queue[3]], 2, key_fn=key_fn, active_key=None)
+    assert [r.request_id for r in picks] == [11, 13]
+
+
+def test_sparsity_scheduler_degrades_to_fifo_without_stats():
+    """No skip history (LM traffic): every prediction is the prior, the
+    ranking sort is stable, so selection is exactly FIFO."""
+    sched = SparsityAwareScheduler()
+    fifo = FIFOScheduler()
+    queue = [_req(i) for i in range(5)]
+    kw = dict(key_fn=lambda r: "k", active_key=None)
+    assert ([r.request_id for r in sched.select(queue, 3, **kw)]
+            == [r.request_id for r in fifo.select(queue, 3, **kw)] == [0, 1, 2])
+    # LM-style results carry no skip_rate: observe must be a no-op
+    sched.observe(queue[0], Result(0, None, stats={"prompt_len": 3}))
+    assert sched._global is None
+    assert observed_skip_rate(Result(0, None, stats={"prompt_len": 3})) is None
+    # ...but a *measured* fully-dense skip rate of 0.0 is a real observation
+    assert observed_skip_rate(Result(0, None, stats={"skip_rate": 0.0})) == 0.0
+    sched.observe(queue[0], Result(0, None, stats={"skip_rate": 0.0}))
+    assert sched._global == 0.0
+
+
+def test_sparsity_scheduler_aging_prevents_starvation():
+    sched = SparsityAwareScheduler(patience=3)
+    key_fn = lambda r: "k"
+    sched.observe(_req(0, source="s"), Result(0, None, stats={"skip_rate": {"a": 1.0}}))
+    sched.observe(_req(1, source="d"), Result(1, None, stats={"skip_rate": {"a": 0.0}}))
+    sched.on_admit(_req(19, source="s"))          # long-lived sparse resident
+    dense = _req(20, source="d")
+    # the sparse resident anchors admission at skip≈1.0; the dense request is
+    # passed over while sparse traffic keeps arriving...
+    for i in range(3):
+        sparse = _req(30 + i, source="s")
+        picks = sched.select([dense, sparse], 1, key_fn=key_fn, active_key="k")
+        assert picks == [sparse]
+        sched.on_admit(sparse)
+    # ...until it exceeds patience and jumps the ranking
+    picks = sched.select([dense, _req(40, source="s")], 1,
+                         key_fn=key_fn, active_key="k")
+    assert picks == [dense]
+
+
+def test_make_scheduler_names():
+    assert make_scheduler("fifo").name == "fifo"
+    assert make_scheduler("sparsity", alpha=0.5).name == "sparsity"
+    with pytest.raises(ValueError):
+        make_scheduler("nope")
+
+
+# ---------------------------------------------------------------------------
+# LM: mid-stream admission is bit-identical to solo runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_runner():
+    params = tf.init_params(jax.random.PRNGKey(0), LM_CFG)
+    return LMRunner(LM_CFG, params, max_seq=32)
+
+
+def _solo_lm(runner, prompt, tokens):
+    return runner.run([Request(0, prompt, {"max_new_tokens": tokens})])[0].outputs
+
+
+def test_lm_mid_stream_admission_bit_identical(lm_runner):
+    """A request admitted while another is mid-decode — and with a different
+    decode budget, impossible under bucketed batch admission — produces
+    exactly the tokens of a solo run (PR-2's scan-prefill path)."""
+    core = EngineCore(lm_runner, EngineConfig(slots=2))
+    a = core.submit([1, 2, 3], max_new_tokens=6)
+    for _ in range(4):                # prefill (3) + 1 decoded token
+        core.step()
+    assert core.in_flight() == 1 and core.poll(a) is None
+    b = core.submit([5], max_new_tokens=3)          # joins a's live session
+    c = core.submit([9, 9, 4, 7], max_new_tokens=2)  # queues for b's slot
+    results = core.run_until_complete()
+    assert results[a].outputs == _solo_lm(lm_runner, [1, 2, 3], 6)
+    assert results[b].outputs == _solo_lm(lm_runner, [5], 3)
+    assert results[c].outputs == _solo_lm(lm_runner, [9, 9, 4, 7], 2)
+    # c can only have entered after b freed its slot
+    order = [rid for _, group in core.admission_log for rid in group]
+    assert order.index(c) > order.index(b)
+
+
+def test_lm_zero_budget_completes_immediately(lm_runner):
+    core = EngineCore(lm_runner, EngineConfig(slots=2))
+    rid = core.submit([4, 2], max_new_tokens=0)
+    results = core.run_until_complete()
+    assert results[rid].outputs == [4, 2]
+    assert core.stats()["steps_run"] == 0           # no compute was launched
+
+
+def test_lm_empty_prompt_matches_batch_path(lm_runner):
+    """The PR-2 batch path serves empty prompts (placeholder first token 0,
+    greedy continuation); continuous admission must produce the same
+    tokens."""
+    outs = {}
+    for admission in ("batch", "continuous"):
+        core = EngineCore(lm_runner, EngineConfig(slots=2, admission=admission))
+        a = core.submit([], max_new_tokens=4)
+        b = core.submit([], max_new_tokens=1)
+        z = core.submit([], max_new_tokens=0)
+        results = core.run_until_complete()
+        outs[admission] = [results[i].outputs for i in (a, b, z)]
+    assert outs["batch"] == outs["continuous"]
+    assert outs["continuous"][1] == [0] and outs["continuous"][2] == []
+
+
+def test_lm_slot_reuse_resets_state(lm_runner):
+    """Back-to-back occupants of one slot must not see each other's cache:
+    serve the same prompt before and after an unrelated long request."""
+    core = EngineCore(lm_runner, EngineConfig(slots=1))
+    x1 = core.submit([7, 7, 7], max_new_tokens=4)
+    y = core.submit([3, 1, 4, 1, 5], max_new_tokens=5)
+    x2 = core.submit([7, 7, 7], max_new_tokens=4)
+    results = core.run_until_complete()
+    assert results[x1].outputs == results[x2].outputs
+    assert results[x1].outputs == _solo_lm(lm_runner, [7, 7, 7], 4)
+
+
+# ---------------------------------------------------------------------------
+# SNN: mid-stream admission equivalence + sparsity-aware grouping
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def snn_runner():
+    params = init_vgg9(jax.random.PRNGKey(0), SNN_CFG)
+    return SNNRunner(SNN_CFG, params)
+
+
+def _solo_snn(runner, img, slots):
+    core = EngineCore(runner, EngineConfig(slots=slots))
+    rid = core.submit(img)
+    return np.asarray(core.run_until_complete()[rid].outputs)
+
+
+def test_snn_mid_stream_admission_bit_identical(snn_runner):
+    """Slots freed by a finished step are refilled with queued images; every
+    request's logits match a solo engine run regardless of when it was
+    admitted or which slot-mates it shared the fused batch with."""
+    imgs = jax.random.uniform(jax.random.PRNGKey(2),
+                              (3, SNN_CFG.img_hw, SNN_CFG.img_hw, 3))
+    core = EngineCore(snn_runner, EngineConfig(slots=2))
+    first = core.submit(imgs[0])
+    assert core.step() == 1                         # runs with a zero-pad mate
+    later = [core.submit(imgs[1]), core.submit(imgs[2])]
+    assert core.step() == 2                         # freed slots refilled
+    results = core.run_until_complete()
+    for rid, img in zip([first] + later, imgs):
+        np.testing.assert_array_equal(np.asarray(results[rid].outputs),
+                                      _solo_snn(snn_runner, img, 2))
+    stats = core.stats()
+    assert stats["steps_run"] == 2
+    assert stats["slot_occupancy"] == pytest.approx(0.75)   # (1 + 2) / (2 * 2)
+    assert sum(stats["slot_served"]) == 3
+
+
+def test_snn_sparsity_scheduler_groups_mixed_trace(snn_runner):
+    """After one observed mixed batch, the sparsity-aware scheduler co-batches
+    a synthetic interleaved sparse/dense trace into pure groups."""
+    hw = SNN_CFG.img_hw
+    zero = jnp.zeros((hw, hw, 3))
+    dense_img = jax.random.uniform(jax.random.PRNGKey(3), (hw, hw, 3))
+    core = EngineCore(snn_runner, EngineConfig(slots=2, scheduler="sparsity"))
+
+    # priming batch: one of each, so the per-source EWMAs learn the gap
+    prime = [core.submit(zero, source="sparse"),
+             core.submit(dense_img, source="dense")]
+    core.run_until_complete()
+
+    by_class = {}
+    for i in range(4):                               # interleaved arrivals
+        src = "sparse" if i % 2 == 0 else "dense"
+        img = zero if src == "sparse" else dense_img
+        by_class[core.submit(img, source=src)] = src
+    results = core.run_until_complete()
+    assert set(results) == set(by_class)
+
+    groups = [group for _, group in core.admission_log
+              if not set(group) & set(prime)]
+    assert len(groups) == 2
+    for group in groups:
+        assert len({by_class[rid] for rid in group}) == 1, core.admission_log
+
+    # served energy reflects the grouping: a sparse request co-batched with
+    # its own kind pays (far) less than the dense batch costs per image
+    sparse_served = [results[r].stats["served_energy_j"]
+                     for r, c in by_class.items() if c == "sparse"]
+    dense_served = [results[r].stats["served_energy_j"]
+                    for r, c in by_class.items() if c == "dense"]
+    assert max(sparse_served) < min(dense_served)
+
+
+def test_snn_batch_energy_accounting(snn_runner):
+    """batch_energy is priced on the batch's total measured spikes and split
+    evenly: served_energy_j * batch_real == batch_energy_j, shared by all
+    slot-mates of one batch."""
+    hw = SNN_CFG.img_hw
+    imgs = jax.random.uniform(jax.random.PRNGKey(4), (2, hw, hw, 3))
+    core = EngineCore(snn_runner, EngineConfig(slots=2))
+    ids = [core.submit(imgs[0]), core.submit(imgs[1])]
+    results = core.run_until_complete()
+    r0, r1 = results[ids[0]].stats, results[ids[1]].stats
+    assert r0["batch_real"] == r1["batch_real"] == 2
+    assert r0["batch_energy_j"] == r1["batch_energy_j"]
+    assert r0["served_energy_j"] * 2 == pytest.approx(r0["batch_energy_j"])
+    # solo energies are intrinsic: independent of the shared batch
+    assert r0["energy_j"] != r1["energy_j"] or np.array_equal(imgs[0], imgs[1])

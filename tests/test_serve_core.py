@@ -1,10 +1,15 @@
 """Unified serving API: EngineCore scheduling + LM/SNN runner equivalence.
 
 The engine must serve both workloads through the same submit()/poll()
-surface: FIFO bucketed batching, fixed-slot padding, per-request results.
-SNN serving must be bit-identical to a direct `vgg9_infer_hybrid` call with
-the fused pipeline's occupancy/skip counters split back out per request, and
-the dense-core conv0 launch must take its block configuration from the plan.
+surface: fixed-slot padding and per-request results under either admission
+policy — run-to-completion FIFO bucketed batching (``admission='batch'``,
+pinned explicitly where the test asserts its semantics) or the default
+step-level continuous admission. SNN serving must be bit-identical to a
+direct `vgg9_infer_hybrid` call with the fused pipeline's occupancy/skip
+counters split back out per request, and the dense-core conv0 launch must
+take its block configuration from the plan. Continuous-admission-specific
+behaviour (mid-stream joins, the sparsity-aware scheduler) is covered in
+test_serve_continuous.py.
 """
 import dataclasses
 
@@ -49,7 +54,7 @@ def snn_setup():
 # ---------------------------------------------------------------------------
 
 def test_submit_poll_lifecycle(lm_setup):
-    core = EngineCore(lm_setup, EngineConfig(slots=2))
+    core = EngineCore(lm_setup, EngineConfig(slots=2, admission="batch"))
     rid = core.submit([1, 2, 3], max_new_tokens=3)
     assert core.poll(rid) is None and core.pending() == 1
     assert core.step() == 1
@@ -61,9 +66,10 @@ def test_submit_poll_lifecycle(lm_setup):
 
 
 def test_fifo_bucketed_batching(lm_setup):
-    """Same-bucket requests batch together up to the slot count; a different
-    bucket (different decode budget) waits for its own batch."""
-    core = EngineCore(lm_setup, EngineConfig(slots=2))
+    """Batch admission: same-bucket requests batch together up to the slot
+    count; a different bucket (different decode budget) waits for its own
+    run-to-completion batch."""
+    core = EngineCore(lm_setup, EngineConfig(slots=2, admission="batch"))
     a = core.submit([1, 2], max_new_tokens=2)
     b = core.submit([3], max_new_tokens=4)            # different bucket
     c = core.submit([4, 5], max_new_tokens=2)         # batches with `a`

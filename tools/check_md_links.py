@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Walks the given files/directories for ``*.md``, extracts inline links and
+images ``[text](target)``, and verifies that every *relative* target exists
+on disk (anchors are stripped; ``http(s)://`` / ``mailto:`` targets are
+skipped — CI must not depend on the network). Exits non-zero listing every
+broken link.
+
+    python tools/check_md_links.py README.md docs src/repro/serve/README.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline links/images; ignores fenced code via a line-level backtick heuristic
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def md_files(paths):
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+        else:
+            sys.exit(f"not a markdown file or directory: {p}")
+
+
+def check_file(path: pathlib.Path):
+    broken = []
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                broken.append((lineno, target))
+    return broken
+
+
+def main(argv):
+    paths = argv or ["README.md", "docs", "src/repro/serve/README.md"]
+    failures = 0
+    for f in md_files(paths):
+        for lineno, target in check_file(f):
+            print(f"{f}:{lineno}: broken link -> {target}")
+            failures += 1
+    if failures:
+        sys.exit(f"{failures} broken markdown link(s)")
+    print(f"checked {len(list(md_files(paths)))} file(s): all links resolve")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
