@@ -4,6 +4,15 @@ Every `emit` both prints the human-readable CSV row and appends a JSON
 record to ``BENCH_results.json`` (repo root, or ``$BENCH_RESULTS``), so the
 perf trajectory is tracked across PRs. `benchmarks.run` aggregates the file
 at the end of a run.
+
+Record schema (enforced in CI by ``tools/check_bench_schema.py``):
+
+    {"name": str, "config": dict, "metrics": dict, "timestamp": int}
+
+``config`` holds the run's descriptive knobs (strings: derived labels,
+scheduler names); ``metrics`` holds every measured quantity (numbers and
+structured sub-dicts, ``us_per_call`` included). `append_result` normalizes
+free-form records into this shape so legacy call sites keep working.
 """
 import json
 import os
@@ -30,8 +39,34 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
     return times[len(times) // 2] * 1e6
 
 
+_SCHEMA_KEYS = ("name", "config", "metrics", "timestamp")
+
+
+def normalize_record(record: dict) -> dict:
+    """Coerce a free-form benchmark record into the canonical schema.
+
+    Already-canonical records pass through. Otherwise: ``name`` and
+    ``timestamp`` (or legacy ``unix_time``) lift to the top level, string
+    payload fields file under ``config``, everything measured under
+    ``metrics``.
+    """
+    if set(record) == set(_SCHEMA_KEYS):
+        return dict(record)
+    rec = dict(record)
+    name = rec.pop("name", "unnamed")
+    ts = rec.pop("timestamp", rec.pop("unix_time", int(time.time())))
+    config = dict(rec.pop("config", {}))
+    metrics = dict(rec.pop("metrics", {}))
+    for k, v in rec.items():
+        (config if isinstance(v, str) else metrics)[k] = v
+    return {"name": name, "config": config, "metrics": metrics,
+            "timestamp": int(ts)}
+
+
 def append_result(record: dict) -> None:
-    """Append one benchmark record to BENCH_results.json (a JSON list)."""
+    """Append one benchmark record to BENCH_results.json (a JSON list),
+    normalized to the canonical schema."""
+    record = normalize_record(record)
     try:
         with open(RESULTS_PATH) as f:
             data = json.load(f)
@@ -49,10 +84,9 @@ def emit(name: str, us_per_call: float, derived: str, **metrics):
     print(f"{name},{us_per_call:.1f},{derived}")
     append_result({
         "name": name,
-        "us_per_call": round(us_per_call, 1),
-        "derived": derived,
-        "unix_time": int(time.time()),
-        **metrics,
+        "config": {"derived": derived},
+        "metrics": {"us_per_call": round(us_per_call, 1), **metrics},
+        "timestamp": int(time.time()),
     })
 
 
@@ -71,5 +105,6 @@ def aggregate(path: str = None) -> dict:
             continue
         entry = summary.setdefault(rec["name"], {"runs": 0, "latest_us": None})
         entry["runs"] += 1
-        entry["latest_us"] = rec.get("us_per_call")
+        entry["latest_us"] = rec.get("metrics", {}).get(
+            "us_per_call", rec.get("us_per_call"))
     return summary

@@ -1,11 +1,22 @@
-"""Distribution utilities (single-host subset).
+"""Distribution package: mesh context, sharding rules, gradient compression.
 
 The model and launch code import sharding/mesh helpers from here so the same
-forward functions run unmodified on one device or a pod. This package
-currently implements the single-host semantics only: no ambient mesh, no-op
-cotangent sharding, replicated parameter/optimizer specs, batch sharding over
-the data axes when a mesh is supplied explicitly. The full distributed
-package (error-feedback gradient compression, multi-device subprocess-tested
-sharding rules — see tests/test_dist.py) is roadmap work.
+forward functions run unmodified on one device or a pod:
+
+* ``context``     — ambient compute-mesh (``compute_mesh`` / ``current_mesh``).
+* ``sharding``    — partitioning rules: ``param_spec``/``param_specs`` with
+  divisibility repair and FSDP-experts mode, ZeRO-1 optimizer-state
+  partitioning (``zero1_opt_specs``), batch/cache specs, cotangent
+  sharding constraints.
+* ``compression`` — error-feedback int8 gradient compression
+  (``quantize_error_feedback``) and the quantize → psum → dequantize
+  all-reduce (``compressed_psum``) used inside ``shard_map`` train steps.
+* ``compat``      — forward-compat shims for older jax (installed on import).
+
+Every rule degrades to replicated/no-op behavior when axes are absent or
+dims don't divide, so the same call sites work on one CPU device and on a
+mesh (tests/test_dist.py runs the multi-device cases in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count``).
 """
-from . import context, sharding  # noqa: F401
+from . import compat  # noqa: F401  (installs jax API shims first)
+from . import compression, context, sharding  # noqa: F401

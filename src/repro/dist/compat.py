@@ -1,0 +1,107 @@
+"""Forward-compatibility shims for the jax sharding API.
+
+The distributed package (and the seed's tests) are written against the
+current jax surface — ``jax.shard_map`` (with ``check_vma``/``axis_names``),
+``jax.make_mesh(..., axis_types=...)`` and ``jax.sharding.AxisType``. The
+container pins an older jax where those live under ``jax.experimental`` or
+don't exist yet. ``install()`` backfills the missing names so the same
+model/test code runs on both; on a jax that already has them it is a no-op.
+
+Installed (only when absent):
+
+* ``jax.sharding.AxisType``   — enum with ``Auto`` / ``Explicit`` / ``Manual``
+                                (old jax has only Auto-mode meshes, so the
+                                value is accepted and dropped by make_mesh).
+* ``jax.make_mesh``           — wrapped to accept ``axis_types=``.
+* ``jax.shard_map``           — ``jax.experimental.shard_map.shard_map`` with
+                                the new keyword surface: ``check_vma`` maps to
+                                ``check_rep``, ``axis_names`` (manual axes) to
+                                the complement ``auto`` frozenset.
+
+Importing ``repro.dist`` installs the shims, so any entry point that touches
+distribution (models, launch, tests, subprocess snippets) gets them before
+the first mesh is built.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    try:
+        import inspect
+        if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+            return
+    except (TypeError, ValueError):  # pragma: no cover - builtins/signatures
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types  # old jax: every mesh axis is Auto
+        return orig(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+                  check_vma=None, check_rep=None, axis_names=None,
+                  auto=None):
+        if auto is None:
+            if axis_names is not None:
+                auto = frozenset(mesh.axis_names) - set(axis_names)
+            else:
+                auto = frozenset()
+        check = True
+        if check_rep is not None:
+            check = check_rep
+        elif check_vma is not None:
+            check = check_vma
+        return _shard_map(f, mesh, in_specs, out_specs,
+                          check_rep=check, auto=frozenset(auto))
+
+    jax.shard_map = shard_map
+
+
+#: True when this jax needed any shim — i.e. we are on the old API/XLA.
+#: Model code uses this to avoid constructs the old XLA miscompiles
+#: (partially-auto shard_map: see models.moe).
+SHIMMED = False
+
+
+def install() -> None:
+    """Backfill missing jax sharding APIs (idempotent).
+
+    SHIMMED latches: once the shims have been installed they satisfy the
+    hasattr probes, so the flag must never be recomputed from scratch on a
+    repeat call."""
+    global SHIMMED
+    SHIMMED = SHIMMED or not (
+        hasattr(jax.sharding, "AxisType") and hasattr(jax, "shard_map"))
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+
+
+install()

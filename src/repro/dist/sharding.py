@@ -1,24 +1,57 @@
-"""Sharding rules (single-host subset).
+"""Sharding rules: parameter partitioning, ZeRO-1, batch/cache specs.
 
-Every helper degrades to replicated/no-op behavior when axes are absent or
-dims don't divide, so the same call sites work on one CPU device and on a
-mesh. Only the rules the model/launch code actually consults are implemented;
-the full rule set (FSDP experts, ZeRO-1 partitioning that genuinely splits
-states) ships with the distributed package (see ROADMAP open items).
+Rules *propose* axes and ``_repair`` keeps only the feasible ones: GSPMD
+rejects specs whose axis size doesn't divide the dimension, so every helper
+degrades to replicated/no-op behavior when mesh axes are absent or dims
+don't divide. The same call sites therefore work on one CPU device and on a
+pod.
+
+Parameter rules (``param_spec``), Megatron-style:
+
+* 1-D tensors (norm gains, biases) and conv kernels replicate — norms are
+  tiny, and the SNN's conv weights are served data-parallel (the batch
+  shards, the weights ride along on every device).
+* matmul weights are the *last two* dims; any leading dims (the scanned
+  period stack, the expert stack) replicate. Default is column-parallel:
+  the output dim shards over ``'model'``. Embeddings propose the vocab dim
+  first; row-parallel names (``wo``, ``w_out``, ``w_down``) propose the
+  input dim.
+* divisibility repair: a proposed axis that doesn't divide is dropped, then
+  the rule falls back to sharding the right-most divisible matrix dim over
+  ``'model'`` (e.g. an odd vocab moves the embedding shard to d_model).
+* FSDP-experts mode additionally shards the expert-stack axis over
+  ``'data'`` so each DP replica stores 1/DP of the expert weights
+  (gathered per layer by ``models.moe``).
+
+ZeRO-1 (``zero1_opt_specs``): optimizer-state leaves inherit their
+parameter's spec and additionally shard the first unsharded divisible axis
+over ``'data'`` — Adam moments / fp32 masters are genuinely partitioned
+across data-parallel replicas, and restore-time resharding in
+``train.checkpoint`` keeps it elastic.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from .context import current_mesh
 
+# last-two-dims matrices whose *input* dim shards over 'model' (row-parallel:
+# their producer is already model-sharded, so the matmul contracts locally)
+_ROW_PARALLEL = ("wo", "w_out", "w_down", "w2")
+# embedding tables: propose the vocab dim first
+_EMBED = ("w_tok",)
+
 
 def dp_axes(mesh) -> Tuple[str, ...]:
     """The data-parallel mesh axes, outermost first."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(mesh.shape[name]) if name in mesh.axis_names else 0
 
 
 def _repair(axes: Sequence[str | None], shape: Tuple[int, ...], mesh) -> Tuple:
@@ -38,28 +71,136 @@ def _repair(axes: Sequence[str | None], shape: Tuple[int, ...], mesh) -> Tuple:
     return tuple(out[: len(shape)])
 
 
-def shard_cotangents(tree):
-    """Constrain cotangent shardings to match the primal layout.
+def _path_key(path) -> str:
+    """'embed/w_tok'-style key from a tree path of DictKey/SequenceKey."""
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))))
+    return "/".join(parts)
 
-    Single-host: identity. On a mesh this pins embedding/period cotangents so
-    the backward pass doesn't replicate them; that constraint is installed by
-    the distributed package.
+
+def param_spec(path, leaf, mesh, fsdp_experts: bool = False) -> P:
+    """PartitionSpec for one parameter leaf (see module docstring rules).
+
+    Args:
+        path: tree path (DictKey/... sequence) of the leaf.
+        leaf: array or ShapeDtypeStruct (only ``.shape`` is read).
+        mesh: the target mesh (``axis_names`` + ``shape`` mapping); ``None``
+            replicates — 1-D leaves never consult it.
+        fsdp_experts: shard the expert-stack axis of ``experts/*`` leaves
+            over the data axis (MoE FSDP storage layout).
     """
-    if current_mesh() is None:
-        return tree
-    return tree
+    shape = tuple(leaf.shape)
+    if len(shape) <= 1:
+        return P()                       # norms/biases/scalars: replicated
+    if mesh is None:
+        return P()
+    key = _path_key(path)
+    name = key.rsplit("/", 1)[-1]
+
+    if len(shape) == 4 and name == "w":
+        return P()                       # conv kernels (SNN): replicated
+
+    n_stack = len(shape) - 2             # scanned periods / expert stacks
+    lead: list = [None] * n_stack
+    if fsdp_experts and "experts" in key and n_stack >= 1:
+        lead[-1] = "data"                # expert axis: FSDP over DP replicas
+
+    mat = shape[-2:]
+    if name in _EMBED:
+        prop = ("model", None)           # vocab-sharded embedding
+    elif name in _ROW_PARALLEL:
+        prop = ("model", None)
+    else:
+        prop = (None, "model")           # column-parallel default
+
+    spec = list(_repair(tuple(lead) + prop, shape, mesh))
+    if "model" not in spec:
+        # fallback: right-most divisible matrix dim takes the model axis
+        tp = _axis_size(mesh, "model")
+        for i in (len(shape) - 1, len(shape) - 2):
+            if tp > 1 and spec[i] is None and mat[i - n_stack] % tp == 0:
+                spec[i] = "model"
+                break
+    return P(*spec)
 
 
 def param_specs(shapes, mesh, fsdp_experts: bool = False):
-    """PartitionSpecs for a parameter tree: replicated single-host rules."""
-    del fsdp_experts
-    return jax.tree.map(lambda leaf: P(), shapes)
+    """PartitionSpecs for a whole parameter tree (`param_spec` per leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh, fsdp_experts), shapes)
+
+
+def shard_cotangents(tree):
+    """Constrain cotangent shardings to match the primal parameter layout.
+
+    Identity on the primal values; on a mesh the VJP constrains each
+    cotangent leaf to its parameter's `param_spec` layout. GSPMD fails to
+    propagate shardings through the scan transpose for stacked-layer and
+    embedding cotangents (they come out replicated, DPx the memory); the
+    explicit constraint restores the sharded layout.
+    """
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return tree
+    from jax.sharding import NamedSharding
+    shardings = jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_spec(p, l, mesh)), tree)
+    flat_sh, _ = jax.tree_util.tree_flatten(shardings)
+
+    @jax.custom_vjp
+    def _ident(t):
+        return t
+
+    def _fwd(t):
+        return t, None
+
+    def _bwd(_, ct):
+        ct_flat, ctdef = jax.tree_util.tree_flatten(ct)
+        out = [jax.lax.with_sharding_constraint(c, s) if hasattr(c, "shape") else c
+               for c, s in zip(ct_flat, flat_sh)]
+        return (jax.tree_util.tree_unflatten(ctdef, out),)
+
+    _ident.defvjp(_fwd, _bwd)
+    return _ident(tree)
 
 
 def zero1_opt_specs(opt_shapes, param_part, mesh):
-    """Optimizer-state specs mirroring the parameter partitioning."""
-    del param_part
-    return jax.tree.map(lambda leaf: P(), opt_shapes)
+    """ZeRO-1 optimizer-state specs: parameter layout + data-axis partition.
+
+    Each optimizer leaf (Adam moment, momentum, factored second-moment row)
+    inherits the spec of the parameter it mirrors (matched by tree-path
+    suffix: ``opt['m'][...path] <- params[...path]``), then the first axis
+    that is still unsharded and divisible by the data-axis size additionally
+    shards over ``'data'``. Leaves with no matching parameter (step counters,
+    Adafactor's factored ``vr``/``vc``) partition on their own shape.
+    """
+    data = _axis_size(mesh, "data")
+    flat_param = [
+        (jax.tree_util.keystr(path), spec)
+        for path, spec in jax.tree_util.tree_flatten_with_path(
+            param_part, is_leaf=lambda x: isinstance(x, P))[0]
+    ]
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        key = jax.tree_util.keystr(path)
+        base: Sequence = ()
+        for pkey, pspec in flat_param:
+            if pkey and key.endswith(pkey):
+                base = tuple(pspec)
+                break
+        entries = list(base) + [None] * (len(shape) - len(base))
+        if data > 1:
+            for i, (e, dim) in enumerate(zip(entries, shape)):
+                if e is None and dim % data == 0 and dim >= data:
+                    entries[i] = "data"
+                    break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
 
 
 def batch_spec(b_specs, mesh):

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from ..dist import compat as _compat  # noqa: F401  (jax API shims)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -23,3 +25,16 @@ def make_host_mesh():
     return jax.make_mesh(
         (n, 1), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_data_mesh(n: int = 0):
+    """1-D ``('data',)`` mesh over ``n`` local devices (0 = all).
+
+    The serving-side mesh: `serve.runners.snn.SNNRunner` splits its slot
+    batch over this axis when it is installed as the ambient compute mesh
+    (``dist.context.compute_mesh``). On CPU, force the device count with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    n = n or len(jax.devices())
+    return jax.make_mesh(
+        (n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))

@@ -3,17 +3,24 @@
     PYTHONPATH=src python -m repro.launch.serve --workload lm --arch qwen1.5-4b --tokens 16
     PYTHONPATH=src python -m repro.launch.serve --workload snn --requests 6 --int4
     PYTHONPATH=src python -m repro.launch.serve --workload snn --scheduler sparsity --mixed-trace
+
+    # data-mesh sharded SNN serving (slot batch split over 2 devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        PYTHONPATH=src python -m repro.launch.serve --workload snn --data-shard 2
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 
 from ..configs import get_arch
+from ..dist.context import compute_mesh
 from ..models import transformer as tf
 from ..serve.api import EngineConfig
 from ..serve.core import EngineCore
+from .mesh import make_data_mesh
 from .train import reduce_cfg
 
 
@@ -62,6 +69,17 @@ def serve_snn(args) -> None:
     runner = SNNRunner(cfg, params, interpret=True)
     core = EngineCore(runner, engine_config(args))
 
+    if args.data_shard > 1:
+        n_dev = len(jax.devices())
+        assert args.data_shard <= n_dev, (
+            f"--data-shard {args.data_shard} needs that many devices "
+            f"(have {n_dev}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.data_shard})")
+        mesh_ctx = compute_mesh(make_data_mesh(args.data_shard))
+        print(f"data-mesh serving: slot batches split over {args.data_shard} devices")
+    else:
+        mesh_ctx = contextlib.nullcontext()
+
     keys = jax.random.split(jax.random.PRNGKey(args.seed + 1), args.requests)
     shape = (cfg.img_hw, cfg.img_hw, cfg.in_ch)
     ids = []
@@ -74,7 +92,8 @@ def serve_snn(args) -> None:
             ids.append(core.submit(img, source="sparse"))
         else:
             ids.append(core.submit(img, source="dense"))
-    results = core.run_until_complete()
+    with mesh_ctx:
+        results = core.run_until_complete()
     for rid in ids:
         res = results[rid]
         pred = int(res.outputs.argmax())
@@ -106,6 +125,9 @@ def main():
                     help="step-level admission vs run-to-completion batching")
     ap.add_argument("--mixed-trace", action="store_true",
                     help="SNN: alternate near-silent and dense requests")
+    ap.add_argument("--data-shard", type=int, default=0,
+                    help="SNN: split slot batches over this many devices "
+                         "(a ('data',) mesh; needs the devices to exist)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

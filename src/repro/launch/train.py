@@ -3,6 +3,10 @@
     PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --steps 50 \
         --d-model 64 --n-layers 4 --vocab 512 --seq 128 --batch 8
 
+    # data-parallel with error-feedback int8 gradient compression:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.train --steps 10 --compress-grads
+
 Production posture: the same code path drives the 512-chip mesh (see
 launch/dryrun.py for the compile-level proof); on this CPU container the
 reduced configs actually train. Checkpoint/restart: --ckpt-dir + --resume.
@@ -25,7 +29,8 @@ from ..models.frontends import synth_frontend
 from ..train.loop import TrainLoop
 from ..train.optim import make_optimizer
 from ..train.schedule import warmup_cosine
-from ..train.train_step import init_train_state, make_train_step
+from ..train.train_step import (init_train_state, make_train_step,
+                                shard_map_compressed_step, stack_error_state)
 from .mesh import make_host_mesh
 
 
@@ -66,6 +71,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the arch's full config (needs real hardware)")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="error-feedback int8 gradient all-reduce over the "
+                         "data axis (dist.compression; shard_map train step)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -76,7 +84,14 @@ def main():
     opt = make_optimizer(cfg.optimizer)
     lr_fn = warmup_cosine(args.lr, 10, args.steps)
     loss_fn = functools.partial(tf.train_loss, cfg=cfg)
-    step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b), opt, lr_fn))
+    n_data = int(mesh.shape["data"])
+    if args.compress_grads:
+        assert args.batch % n_data == 0, (args.batch, n_data)
+        inner = make_train_step(lambda p, b: loss_fn(p, b), opt, lr_fn,
+                                compress_axis="data")
+        step = jax.jit(shard_map_compressed_step(inner, mesh))
+    else:
+        step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b), opt, lr_fn))
 
     def make_batch(i):
         s_tok = args.seq - (cfg.n_frontend_tokens if cfg.frontend else 0)
@@ -86,9 +101,15 @@ def main():
                 jax.random.fold_in(jax.random.PRNGKey(args.seed), i), cfg, args.batch)
         return b
 
-    with mesh, compute_mesh(mesh):
+    # compressed steps are already manual over 'data' (shard_map): no ambient
+    # mesh, or the model's internal sharding constraints would nest into it
+    import contextlib
+    mesh_ctx = contextlib.nullcontext() if args.compress_grads else compute_mesh(mesh)
+    with mesh, mesh_ctx:
         params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
-        state = init_train_state(params, opt)
+        state = init_train_state(params, opt, compress=args.compress_grads)
+        if args.compress_grads:
+            state = stack_error_state(state, n_data)
         loop = TrainLoop(step, make_batch, ckpt_dir=args.ckpt_dir,
                          ckpt_every=args.ckpt_every, log_every=5)
         restored, start = loop.maybe_restore(jax.eval_shape(lambda: state))

@@ -62,18 +62,35 @@ def moe_apply(p: Dict, x: jax.Array, *, top_k: int, act: str, n_experts: int,
     from ..dist.context import current_mesh
     mesh = current_mesh()
     if mesh is not None and fsdp_experts:
-        # FSDP gather: expert weights are stored 'data'-sharded; constrain to
-        # the compute layout here so GSPMD inserts one all-gather per layer
-        # (overlappable), instead of keeping a full replica resident.
+        # FSDP gather: expert weights are stored 'data'-sharded on the expert
+        # axis (dist.sharding.param_spec); constrain to the compute layout —
+        # expert axis gathered, d_ff kept 'model'-sharded (column-parallel, so
+        # the gather never crosses the tensor-parallel axis) — here so GSPMD
+        # inserts one all-gather per layer (overlappable), instead of keeping
+        # a full replica resident.
         from jax.sharding import NamedSharding, PartitionSpec as P
         from ..dist.sharding import _repair
+
+        def _gather_spec(path, leaf):
+            # mirror param_spec's matrix layout: w_out is row-parallel
+            # ('model' on d_ff, dim -2); w_in/w_gate are column-parallel
+            # ('model' on d_ff, the last dim) — only the expert axis moves.
+            name = str(getattr(path[-1], "key", path[-1]))
+            tp_dim = len(leaf.shape) - (2 if name == "w_out" else 1)
+            axes = [None] * len(leaf.shape)
+            axes[tp_dim] = "model"
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, P(*_repair(axes, tuple(leaf.shape), mesh))))
+
         p = dict(p)
-        p["experts"] = jax.tree.map(
-            lambda leaf: jax.lax.with_sharding_constraint(
-                leaf, NamedSharding(mesh, P(*_repair(
-                    ["model", None, None], tuple(leaf.shape), mesh)))),
-            p["experts"])
-    if mesh is not None and "data" in mesh.axis_names:
+        p["experts"] = jax.tree_util.tree_map_with_path(_gather_spec, p["experts"])
+    from ..dist import compat as _compat
+    if (mesh is not None and "data" in mesh.axis_names
+            # partially-auto shard_map (manual dp, auto 'model') trips a
+            # fatal SPMD-partitioner check on the old XLA the compat shims
+            # target; there, tensor-parallel MoE falls back to pure GSPMD
+            and not (_compat.SHIMMED and "model" in mesh.axis_names
+                     and mesh.shape["model"] > 1)):
         from jax.sharding import PartitionSpec as P
         dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         ndp = 1

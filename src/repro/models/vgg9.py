@@ -324,6 +324,73 @@ def vgg9_infer_hybrid(params: Dict, images: jax.Array, cfg: VGG9Config, *,
     return logits, counts
 
 
+_SHARDED_FNS: Dict = {}
+
+
+def vgg9_infer_hybrid_sharded(params: Dict, images: jax.Array, cfg: VGG9Config, *,
+                              mesh, axis: str = "data", interpret: bool = True,
+                              plan=None, return_stats: bool = False):
+    """Data-mesh sharded fused inference: the folded ``[T*B·H·W, K]`` spiking
+    matmuls split over ``mesh``'s ``axis`` via ``shard_map``.
+
+    Every layer of the fused graph is row-independent over the batch, so the
+    global batch shards contiguously: device ``d`` serves images
+    ``[d*B/ndev, (d+1)*B/ndev)`` with a *local* plan sized to ``B/ndev``
+    slots, weights replicated. Logits are bit-identical to the unsharded
+    graph (same per-row accumulation order; the plan only re-tiles M).
+
+    Stat layout differs from `vgg9_infer_hybrid` so per-shard counters stay
+    attributable (see `serve.runners.snn` for the consumer):
+
+    * ``counts``  — per-layer ``[ndev]`` vectors (sum for the global count);
+    * ``*_per_image`` stats — global ``[B]`` vectors (shard-concatenated);
+    * every other stat leaf (``occ_map``, ``row_occ``, ``skip_rate``,
+      ``block_m``, ``rows``, tile counts) — stacked with a leading ``[ndev]``
+      device axis; ``row_occ[d]`` rows are in device ``d``'s local folded
+      order.
+
+    Args:
+        mesh: a mesh whose ``axis`` divides the batch (``B % ndev == 0``).
+        plan: optional `HybridPlan` sized to the *local* batch ``B/ndev``.
+    """
+    assert cfg.coding == "direct"
+    b = images.shape[0]
+    ndev = int(mesh.shape[axis])
+    assert b % ndev == 0, f"batch {b} must divide the '{axis}' axis ({ndev})"
+    b_local = b // ndev
+    if plan is None:
+        from ..core.hybrid import plan_vgg9_inference
+        plan = plan_vgg9_inference(cfg, b_local)
+
+    from jax.sharding import PartitionSpec as P
+
+    key = (cfg, plan, mesh, axis, interpret, return_stats,
+           images.shape, str(images.dtype))
+    if key not in _SHARDED_FNS:
+        def local_fn(p, im):
+            logits, counts, stats = _infer_hybrid_fused(
+                p, im, cfg=cfg, plan=plan, interpret=interpret,
+                with_stats=return_stats)
+            counts = {k: v.reshape(1) for k, v in counts.items()}
+            stats = {
+                name: {k: (v if k.endswith("_per_image") else v[None])
+                       for k, v in st.items()}
+                for name, st in stats.items()}
+            return logits, counts, stats
+
+        shape_local = jax.ShapeDtypeStruct((b_local,) + images.shape[1:],
+                                           images.dtype)
+        out_shapes = jax.eval_shape(local_fn, params, shape_local)
+        out_specs = jax.tree.map(lambda _: P(axis), out_shapes)
+        _SHARDED_FNS[key] = jax.jit(jax.shard_map(
+            local_fn, mesh=mesh, in_specs=(P(), P(axis)),
+            out_specs=out_specs, check_vma=False))
+    logits, counts, stats = _SHARDED_FNS[key](params, images)
+    if return_stats:
+        return logits, counts, stats
+    return logits, counts
+
+
 def vgg9_infer_hybrid_unfused(params: Dict, images: jax.Array, cfg: VGG9Config, *,
                               interpret: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """The pre-fusion pipeline: T separate in-kernel-gated spike_conv +

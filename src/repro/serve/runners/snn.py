@@ -17,6 +17,15 @@ occupancy/skip counters are split back out per request:
 * paper-model energy — Eq. 3 workloads built from each request's *measured*
   input-spike counts, priced with the plan's NC allocation and the FPGA
   power model (`core.energy.energy_per_image`).
+
+Data-mesh sharding: under an ambient compute mesh (`dist.context`) whose
+``'data'`` axis divides the slot count, `run` switches to
+`vgg9_infer_hybrid_sharded` — the folded [T*B·H·W, K] matmuls split across
+devices, weights replicated, and the per-shard occupancy counters are
+re-assembled so every per-request stat (skip rate, spike counts, energy) is
+identical to the single-device run. `EngineCore` needs no changes: sharding
+is a runner concern, engaged by wrapping engine stepping in
+``compute_mesh(mesh)``.
 """
 from __future__ import annotations
 
@@ -28,7 +37,9 @@ import numpy as np
 from ...core.energy import energy_per_image
 from ...core.hybrid import HybridPlan, plan_vgg9_inference
 from ...core.workload import (conv_workload, dense_input_workload, fc_workload)
-from ...models.vgg9 import VGG9Config, conv_names, vgg9_infer_hybrid
+from ...dist.context import current_mesh
+from ...models.vgg9 import (VGG9Config, conv_names, vgg9_infer_hybrid,
+                            vgg9_infer_hybrid_sharded)
 from ..api import PAD_REQUEST_ID, Request, Result
 
 
@@ -83,15 +94,20 @@ class SNNRunner:
     def filler(self, request: Request) -> Request:
         return Request(PAD_REQUEST_ID, jnp.zeros_like(jnp.asarray(request.payload)))
 
-    def run(self, batch: Sequence[Request]) -> List[Result]:
-        images = jnp.stack([jnp.asarray(r.payload) for r in batch])
-        n = len(batch)
+    def _data_shards(self, n: int) -> int:
+        """How many ways to split a slot batch: the ambient mesh's 'data'
+        axis size when it divides the batch, else 1 (unsharded)."""
+        mesh = current_mesh()
+        if mesh is None or "data" not in mesh.axis_names:
+            return 1
+        ndev = int(mesh.shape["data"])
+        return ndev if ndev > 1 and n % ndev == 0 else 1
+
+    def _run_unsharded(self, images, n: int):
         plan = self.plan(n)
         logits, counts, stats = vgg9_infer_hybrid(
             self.params, images, self.cfg, interpret=self.interpret,
             plan=plan, return_stats=True)
-
-        logits = np.asarray(logits)
         batch_skip = {k: float(v["skip_rate"]) for k, v in stats.items()
                       if "skip_rate" in v}
         out_spikes = {k: np.asarray(v["out_spikes_per_image"], np.float64)
@@ -108,7 +124,62 @@ class SNNRunner:
             per_req_skip[name] = _per_request_skip(
                 np.asarray(st["row_occ"]), int(st["block_m"]), int(st["rows"]),
                 rows_per_slice=ks.m // (t * n), batch=n)
+        return np.asarray(logits), batch_skip, out_spikes, in_spikes, per_req_skip
 
+    def _run_sharded(self, images, n: int, ndev: int):
+        """Split the slot batch over the data mesh (`vgg9_infer_hybrid_sharded`)
+        and re-assemble per-request counters from the per-shard stats.
+
+        Per-image spike vectors come back shard-concatenated (already global);
+        occupancy maps come back stacked per shard, so per-request skip rates
+        are computed shard-by-shard — device ``d`` owns requests
+        ``[d*n/ndev, (d+1)*n/ndev)`` — and written into the global vector.
+        The numbers match the unsharded run exactly: rows_per_slice and the
+        128-row sparse M tile are batch-size-invariant, so re-tiling a
+        request's own rows gives the same served-alone skip rate."""
+        mesh = current_mesh()
+        b_local = n // ndev
+        plan = self.plan(b_local)
+        logits, counts, stats = vgg9_infer_hybrid_sharded(
+            self.params, images, self.cfg, mesh=mesh, interpret=self.interpret,
+            plan=plan, return_stats=True)
+        batch_skip = {k: float(np.mean(np.asarray(v["skip_rate"])))
+                      for k, v in stats.items() if "skip_rate" in v}
+        out_spikes = {k: np.asarray(v["out_spikes_per_image"], np.float64)
+                      for k, v in stats.items()}
+        in_spikes = {k: np.asarray(v["in_spikes_per_image"], np.float64)
+                     for k, v in stats.items() if "in_spikes_per_image" in v}
+
+        per_req_skip: Dict[str, np.ndarray] = {}
+        t = self.cfg.timesteps
+        for name, st in stats.items():
+            if "occ_map" not in st:
+                continue
+            ks = plan.layer(name).kernel
+            row_occ = np.asarray(st["row_occ"])
+            skip = np.zeros(n)
+            for d in range(ndev):
+                skip[d * b_local:(d + 1) * b_local] = _per_request_skip(
+                    row_occ[d], int(np.asarray(st["block_m"])[d]),
+                    int(np.asarray(st["rows"])[d]),
+                    rows_per_slice=ks.m // (t * b_local), batch=b_local)
+            per_req_skip[name] = skip
+        return np.asarray(logits), batch_skip, out_spikes, in_spikes, per_req_skip
+
+    def run(self, batch: Sequence[Request]) -> List[Result]:
+        images = jnp.stack([jnp.asarray(r.payload) for r in batch])
+        n = len(batch)
+        ndev = self._data_shards(n)
+        if ndev > 1:
+            logits, batch_skip, out_spikes, in_spikes, per_req_skip = \
+                self._run_sharded(images, n, ndev)
+        else:
+            logits, batch_skip, out_spikes, in_spikes, per_req_skip = \
+                self._run_unsharded(images, n)
+
+        # energy is priced with the full-slot-count plan in both modes so a
+        # request's Eq. 3 estimate doesn't change with the device count
+        plan = self.plan(n)
         energies = [self._energy_estimate(plan, {k: v[i] for k, v in in_spikes.items()})
                     for i in range(n)]
 

@@ -152,16 +152,20 @@ def make_optimizer(name: str, **kw) -> Optimizer:
 # ZeRO-1 sharding of optimizer state
 # ---------------------------------------------------------------------------
 
-def zero1_spec(param_spec, shape, data_axis: str = "data"):
+def zero1_spec(param_spec, shape, data_axis: str = "data", data_size: int = 2):
     """Add `data` sharding to the first axis that is unsharded & divisible.
 
     param_spec: jax.sharding.PartitionSpec of the parameter.
+    data_size: the data axis size to check divisibility against (pass the
+    mesh's actual ``mesh.shape[data_axis]``; `dist.sharding.zero1_opt_specs`
+    is the tree-level form that does this for a whole optimizer state).
     Returns a PartitionSpec for fp32 optimizer moments of the same shape.
     """
     from jax.sharding import PartitionSpec as P
     entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
-    for i, (e, dim) in enumerate(zip(entries, shape)):
-        if e is None and dim % 2 == 0:  # divisibility refined by caller's mesh
-            entries[i] = data_axis
-            return P(*entries)
+    if data_size > 1:
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is None and dim % data_size == 0:
+                entries[i] = data_axis
+                return P(*entries)
     return P(*entries)

@@ -17,8 +17,19 @@ import jax.numpy as jnp
 from .optim import Optimizer, apply_updates, clip_by_global_norm
 
 
-def init_train_state(params: Any, opt: Optimizer) -> Dict[str, Any]:
-    return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+def init_train_state(params: Any, opt: Optimizer, *, compress: bool = False) -> Dict[str, Any]:
+    """Train-state pytree. With ``compress=True`` the state additionally
+    carries ``grad_err`` — the per-shard error-feedback residuals consumed by
+    a step built with ``make_train_step(compress_axis=...)``. The residual is
+    shard-local (each data-parallel rank keeps its own), so a compressed
+    step must run inside ``shard_map`` with the residual's leading layout
+    matching the data axis."""
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress:
+        from ..dist.compression import init_error_state
+        state["grad_err"] = init_error_state(params)
+    return state
 
 
 def make_train_step(
@@ -30,6 +41,7 @@ def make_train_step(
     clip_norm: float = 1.0,
     grad_shardings: Any = None,
     grad_dtype: str = "",
+    compress_axis: str = "",
 ) -> Callable[[Dict, Dict], Tuple[Dict, Dict]]:
     """loss_fn(params, batch) -> scalar. Batch leading dim must divide
     accum_steps when accumulation is enabled.
@@ -38,7 +50,16 @@ def make_train_step(
     constrains gradients to the parameter sharding. GSPMD fails to propagate
     shardings through the scan transpose for stacked-layer parameter grads
     (they come out replicated, 16x the memory); the explicit constraint
-    restores the sharded layout."""
+    restores the sharded layout.
+
+    compress_axis: mesh axis name for error-feedback int8 gradient
+    compression (``dist.compression.compressed_psum``). When set, the step
+    must run *inside* ``shard_map`` over that axis (it issues ``psum``/
+    ``pmax``), the state must come from ``init_train_state(compress=True)``,
+    and per-shard gradients are reduced to the quantized global mean before
+    clipping — the loss metric is likewise ``pmean``-ed so every shard
+    reports the global value. The residual state is threaded through
+    ``state['grad_err']``."""
 
     raw_grad_fn = jax.value_and_grad(loss_fn)
 
@@ -76,12 +97,55 @@ def make_train_step(
 
     def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
         loss, grads = compute_grads(state["params"], batch)
+        new_err = None
+        if compress_axis:
+            from ..dist.compression import compressed_psum
+            grads, new_err = compressed_psum(grads, state["grad_err"], compress_axis)
+            loss = jax.lax.pmean(loss, compress_axis)
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
         lr = lr_fn(state["step"])
         updates, new_opt = opt.update(grads, state["opt"], state["params"], lr)
         new_params = apply_updates(state["params"], updates)
         new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        if new_err is not None:
+            new_state["grad_err"] = new_err
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_state, metrics
 
     return train_step
+
+
+def stack_error_state(state: Dict, n_shards: int) -> Dict:
+    """Give ``grad_err`` leaves the leading ``[n_shards]`` device axis that
+    `shard_map_compressed_step` shards over (residuals are per-rank)."""
+    return dict(state, grad_err=jax.tree.map(
+        lambda e: jnp.zeros((n_shards,) + e.shape, e.dtype), state["grad_err"]))
+
+
+def shard_map_compressed_step(step, mesh, data_axis: str = "data"):
+    """Run a ``compress_axis`` train step data-parallel under ``shard_map``.
+
+    The wrapped step sees shard-local batches and its own residual slice
+    (``grad_err`` is stored with a leading device axis — `stack_error_state`
+    — and sharded over ``data_axis``; everything else is replicated). The
+    compressed psum inside the step reduces gradients to the global mean, so
+    params/opt update identically on every shard and come back replicated.
+    Do NOT install the mesh as the ambient compute mesh around this step:
+    the body is already manual over ``data_axis`` and nested sharding
+    constraints would conflict.
+    """
+    from jax.sharding import PartitionSpec as P
+    from ..dist import compat as _compat  # noqa: F401  (jax.shard_map shim)
+    state_specs = {"params": P(), "opt": P(), "step": P(),
+                   "grad_err": P(data_axis)}
+
+    def local(state, batch):
+        state = dict(state, grad_err=jax.tree.map(lambda e: e[0], state["grad_err"]))
+        new_state, metrics = step(state, batch)
+        new_state = dict(new_state,
+                         grad_err=jax.tree.map(lambda e: e[None], new_state["grad_err"]))
+        return new_state, metrics
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(state_specs, P(data_axis)),
+                         out_specs=(state_specs, P()), check_vma=False)

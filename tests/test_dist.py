@@ -13,9 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# The full distributed package (gradient compression, multi-device sharding
-# rules) is not implemented yet — only the single-host subset exists. Skip
-# rather than fail collection (ROADMAP open item).
+# The distributed package is implemented; this importorskip is a tripwire,
+# not a skip: if `repro.dist.compression` ever disappears the CI skip-audit
+# step fails the build on the "ROADMAP open item" reason below instead of
+# letting the suite silently shrink.
 pytest.importorskip(
     "repro.dist.compression",
     reason="distributed repro.dist package not implemented yet (ROADMAP open item)")

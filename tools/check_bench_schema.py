@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Validate BENCH_results.json against the benchmark record schema.
+
+Every record must be exactly
+
+    {"name": str, "config": dict, "metrics": dict, "timestamp": int}
+
+(`benchmarks/common.py` normalizes free-form emits into this shape; this
+check keeps the stored file canonical so cross-PR tooling can rely on it).
+Stdlib-only — runs in the docs CI job without the jax toolchain.
+
+    python tools/check_bench_schema.py [BENCH_results.json ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED = {
+    "name": str,
+    "config": dict,
+    "metrics": dict,
+    "timestamp": (int, float),
+}
+
+
+def check_record(rec) -> list:
+    problems = []
+    if not isinstance(rec, dict):
+        return [f"record is {type(rec).__name__}, not an object"]
+    for key, typ in REQUIRED.items():
+        if key not in rec:
+            problems.append(f"missing required key '{key}'")
+        elif not isinstance(rec[key], typ) or isinstance(rec[key], bool):
+            problems.append(
+                f"'{key}' is {type(rec[key]).__name__}, expected "
+                f"{typ[0].__name__ if isinstance(typ, tuple) else typ.__name__}")
+    for key in sorted(set(rec) - set(REQUIRED)):
+        problems.append(f"unknown top-level key '{key}' "
+                        "(file it under config/metrics)")
+    return problems
+
+
+def check_file(path: str) -> int:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        print(f"{path}: missing (nothing to check)")
+        return 0
+    except json.JSONDecodeError as e:
+        print(f"{path}: invalid JSON: {e}")
+        return 1
+    if not isinstance(data, list):
+        print(f"{path}: top level must be a JSON list of records")
+        return 1
+    errors = 0
+    for i, rec in enumerate(data):
+        problems = check_record(rec)
+        if problems:
+            errors += 1
+            label = rec.get("name", "?") if isinstance(rec, dict) else "?"
+            for p in problems:
+                print(f"{path}[{i}] ({label}): {p}")
+    print(f"{path}: {len(data)} records, {errors} invalid")
+    return 1 if errors else 0
+
+
+def main(argv) -> int:
+    paths = argv or ["BENCH_results.json"]
+    return max(check_file(p) for p in paths)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
