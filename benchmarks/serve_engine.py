@@ -1,6 +1,6 @@
-"""Unified serving engine benchmark: admission policies and schedulers.
+"""Unified serving engine benchmark: admission, schedulers, budgets, SLOs.
 
-Two experiments through one `EngineCore`:
+Four experiments through one `EngineCore`:
 
 * LM — ragged greedy generation with *mixed decode budgets*: run-to-completion
   bucketed batching (``admission='batch'``, the PR-2 policy) vs step-level
@@ -9,13 +9,24 @@ Two experiments through one `EngineCore`:
   occupancy gap is the price of bucketing ragged budgets.
 * SNN — batched spiking-VGG9 inference on a *mixed-sparsity trace*
   (interleaved near-silent and dense images, tagged by source): FIFO vs the
-  sparsity-aware scheduler, both under continuous admission. Reports req/s,
-  Eq. 3 energy/image — intrinsic (`energy_j`, invariant by construction) and
-  as-served (`served_energy_j`, the request's share of the batch it rode
-  in) — split by class, plus batch purity and the per-layer batch skip
-  rates. Co-batching sparse with sparse is the paper's co-design loop closed
-  in software: the sparse class's served energy drops toward its intrinsic
-  cost instead of averaging with dense stragglers.
+  sparsity-aware scheduler vs `slo:sparsity` (the SLO wrapper composed over
+  it), all under continuous admission. Reports req/s, Eq. 3 energy/image —
+  intrinsic (`energy_j`, invariant by construction) and as-served
+  (`served_energy_j`, the request's share of the batch it rode in) — split
+  by class, plus batch purity and the per-layer batch skip rates.
+  Co-batching sparse with sparse is the paper's co-design loop closed in
+  software: the sparse class's served energy drops toward its intrinsic
+  cost instead of averaging with dense stragglers — and composing the SLO
+  layer on top must not give that win back (asserted).
+* LM chunked prefill — a long prompt joins a full decode batch; goodput
+  (resident decode tokens per engine step) is swept over ``prefill_chunk``.
+  Token-by-token (chunk 1, the old behavior) pins the joiner in its slot
+  for prompt-length steps; chunking packs the same decode work into far
+  fewer steps, outputs asserted bit-identical at every chunk size.
+* LM latency SLOs — a mixed bulk/interactive trace on a deterministic
+  step-counting engine clock: FIFO misses the interactive class's deadline
+  (requests expire behind bulk residents), the `SLOScheduler` meets it by
+  admitting tightest-deadline-first.
 
 Both schedulers must return bit-identical outputs per request (asserted);
 only composition, latency and energy attribution may differ.
@@ -40,7 +51,7 @@ from repro.kernels.spike_conv import ops as sc_ops
 from repro.models import transformer as tf
 from repro.models.vgg9 import init_vgg9
 from repro.serve.api import EngineConfig
-from repro.serve.core import EngineCore
+from repro.serve.core import EngineCore, StepClock
 from repro.serve.runners.lm import LMRunner
 from repro.serve.runners.snn import SNNRunner
 
@@ -61,10 +72,15 @@ def _drain(core, payloads, options=None):
 # LM: batch vs continuous admission on mixed decode budgets
 # ---------------------------------------------------------------------------
 
+def _lm_cfg():
+    return ArchConfig(name="bench-serve", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab=61, dtype="float32", remat="none",
+                      q_chunk=8, kv_chunk=8)
+
+
 def bench_lm(smoke: bool) -> dict:
-    cfg = ArchConfig(name="bench-serve", family="dense", n_layers=2, d_model=32,
-                     n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=61,
-                     dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+    cfg = _lm_cfg()
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     slots, tokens = (2, 4) if smoke else (4, 8)
     runner = LMRunner(cfg, params, max_seq=64)
@@ -158,7 +174,7 @@ def bench_snn(smoke: bool) -> dict:
 
     scheds = {}
     outputs = {}
-    for scheduler in ("fifo", "sparsity"):
+    for scheduler in ("fifo", "sparsity", "slo:sparsity"):
         core = EngineCore(runner, EngineConfig(slots=slots, scheduler=scheduler))
         results, dt = _drain(core, payloads, options)
         stats = core.stats()
@@ -191,8 +207,14 @@ def bench_snn(smoke: bool) -> dict:
         outputs[scheduler] = [np.asarray(r.outputs) for r in results]
 
     # scheduling may change composition and energy attribution — never logits
-    for a, b in zip(outputs["fifo"], outputs["sparsity"]):
-        np.testing.assert_array_equal(a, b)
+    for name in ("sparsity", "slo:sparsity"):
+        for a, b in zip(outputs["fifo"], outputs[name]):
+            np.testing.assert_array_equal(a, b)
+    # composing the SLO layer over the sparsity policy must keep the sparse
+    # class's served-energy win (no deadlines in the trace -> the wrapper
+    # delegates composition to its inner scheduler untouched)
+    assert (scheds["slo:sparsity"]["served_energy_sparse_j"]
+            <= scheds["fifo"]["served_energy_sparse_j"] * 0.67), scheds
 
     rec = {
         "name": "serve_engine_snn",
@@ -211,10 +233,152 @@ def bench_snn(smoke: bool) -> dict:
     return rec
 
 
+# ---------------------------------------------------------------------------
+# LM: chunked prefill — goodput vs chunk size while a long prompt joins
+# ---------------------------------------------------------------------------
+
+def bench_chunked_prefill(smoke: bool) -> dict:
+    """A long prompt joins a full decode batch; sweep ``prefill_chunk``.
+
+    Goodput = resident decode tokens per engine step (`EngineCore.stats`).
+    Token-by-token prefill (chunk 1) holds the joiner's slot for
+    prompt-length steps; every larger chunk packs the same decode work into
+    fewer steps. Outputs are asserted bit-identical across all chunk sizes
+    and to a solo run of the long prompt.
+    """
+    cfg = _lm_cfg()
+    rng = np.random.default_rng(7)
+    if smoke:
+        slots, prompt_len, chunks, max_seq = 2, 48, (1, 4, 16), 96
+        resident_budget, joiner_budget = 24, 4
+    else:
+        slots, prompt_len, chunks, max_seq = 4, 512, (1, 8, 64), 544
+        resident_budget, joiner_budget = 96, 8
+    runner = LMRunner(cfg, params=tf.init_params(jax.random.PRNGKey(0), cfg),
+                      max_seq=max_seq)
+    long_prompt = [int(t) for t in rng.integers(1, cfg.vocab, size=prompt_len)]
+    short_prompts = [[int(t) for t in rng.integers(1, cfg.vocab, size=3)]
+                     for _ in range(slots)]
+
+    solo_core = EngineCore(runner, EngineConfig(slots=slots))
+    solo_id = solo_core.submit(long_prompt, max_new_tokens=joiner_budget)
+    solo = solo_core.run_until_complete()[solo_id].outputs
+
+    sweep = {}
+    outputs = {}
+    for chunk in chunks:
+        core = EngineCore(runner, EngineConfig(slots=slots,
+                                               prefill_chunk=chunk))
+        resident_ids = [core.submit(p, max_new_tokens=resident_budget)
+                        for p in short_prompts]
+        core.step()                     # decode batch is full and live
+        joiner = core.submit(long_prompt, max_new_tokens=joiner_budget)
+        t0 = time.perf_counter()
+        results = core.run_until_complete()
+        dt = time.perf_counter() - t0
+        stats = core.stats()
+        sweep[chunk] = {
+            "steps_run": stats["steps_run"],
+            "decode_tokens": stats["decode_tokens"],
+            "goodput_decode_tok_per_step":
+                round(stats["goodput_decode_tok_per_step"], 4),
+            "joiner_ttft_steps": results[joiner].stats["ttft_steps"],
+            "joiner_prefill_chunks": results[joiner].stats["prefill_chunks"],
+            "wall_s": round(dt, 3),
+        }
+        outputs[chunk] = [results[i].outputs
+                          for i in resident_ids + [joiner]]
+        assert results[joiner].outputs == solo, chunk
+
+    base = outputs[chunks[0]]
+    for chunk in chunks[1:]:
+        assert outputs[chunk] == base, chunk           # bit-identical sweep
+        # the acceptance bar: chunked prefill strictly beats token-by-token
+        assert (sweep[chunk]["goodput_decode_tok_per_step"]
+                > sweep[chunks[0]]["goodput_decode_tok_per_step"]), sweep
+
+    rec = {"name": "serve_engine_lm_chunked_prefill", "slots": slots,
+           "prompt_len": prompt_len, "sweep": {str(c): sweep[c] for c in chunks}}
+    g1 = sweep[chunks[0]]["goodput_decode_tok_per_step"]
+    gN = sweep[chunks[-1]]["goodput_decode_tok_per_step"]
+    emit("serve_engine_lm_chunked_prefill", 0.0,
+         f"goodput tok/step chunk{chunks[0]}={g1} chunk{chunks[-1]}={gN}",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# LM: latency SLOs — FIFO misses a per-class deadline the SLO scheduler meets
+# ---------------------------------------------------------------------------
+
+def bench_slo(smoke: bool) -> dict:
+    """Mixed bulk/interactive LM trace under a per-class deadline.
+
+    Bulk requests (long decode budgets, no deadline) arrive first and fill
+    the queue; interactive requests (short budgets, tight ``deadline_s`` in
+    engine steps, higher priority) arrive behind them. FIFO admits in
+    arrival order, so the interactive class expires behind bulk residents;
+    the `SLOScheduler` admits tightest-deadline-first and meets the class
+    deadline — without touching the bulk outputs.
+    """
+    cfg = _lm_cfg()
+    rng = np.random.default_rng(11)
+    slots = 2
+    n_bulk, bulk_tokens = (3, 16) if smoke else (4, 24)
+    n_inter, inter_tokens = 2, 4
+    # prefill(4) + decode steps + one admission step of slack, per class
+    deadline = 4 + inter_tokens + 4
+    runner = LMRunner(cfg, params=tf.init_params(jax.random.PRNGKey(0), cfg),
+                      max_seq=64)
+    bulk = [[int(t) for t in rng.integers(1, cfg.vocab, size=4)]
+            for _ in range(n_bulk)]
+    inter = [[int(t) for t in rng.integers(1, cfg.vocab, size=4)]
+             for _ in range(n_inter)]
+
+    policies = {}
+    for scheduler in ("fifo", "slo"):
+        clock = StepClock()     # deadlines in engine steps: deterministic
+        core = EngineCore(runner, EngineConfig(slots=slots,
+                                               scheduler=scheduler),
+                          clock=clock)
+        clock.attach(core)
+        bulk_ids = [core.submit(p, max_new_tokens=bulk_tokens) for p in bulk]
+        inter_ids = [core.submit(p, max_new_tokens=inter_tokens,
+                                 deadline_s=deadline, priority=1)
+                     for p in inter]
+        results = core.run_until_complete()
+        met = sum(results[i].status == "ok" for i in inter_ids)
+        policies[scheduler] = {
+            "interactive_met": met,
+            "interactive_total": n_inter,
+            "interactive_expired": sum(results[i].status == "expired"
+                                       for i in inter_ids),
+            "bulk_done": sum(results[i].status == "ok" for i in bulk_ids),
+            "steps_run": core.stats()["steps_run"],
+            "deadline_steps": deadline,
+        }
+    # the acceptance bar: the SLO scheduler meets the class deadline FIFO
+    # misses, and bulk traffic still completes
+    assert policies["slo"]["interactive_met"] == n_inter, policies
+    assert policies["fifo"]["interactive_met"] < n_inter, policies
+    assert policies["slo"]["bulk_done"] == n_bulk, policies
+
+    rec = {"name": "serve_engine_lm_slo", "slots": slots,
+           "bulk": n_bulk, "interactive": n_inter, "policies": policies}
+    emit("serve_engine_lm_slo", 0.0,
+         f"interactive met fifo={policies['fifo']['interactive_met']}"
+         f"/{n_inter} slo={policies['slo']['interactive_met']}/{n_inter}",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
 def run(smoke: bool = False) -> dict:
     lm = bench_lm(smoke)
     snn = bench_snn(smoke)
-    record = {"name": "serve_engine", "lm": lm, "snn": snn}
+    chunked = bench_chunked_prefill(smoke)
+    slo = bench_slo(smoke)
+    record = {"name": "serve_engine", "lm": lm, "snn": snn,
+              "chunked_prefill": chunked, "slo": slo}
     print("SERVE_ENGINE_JSON " + json.dumps(record, sort_keys=True))
     append_result(record)
     return record

@@ -16,7 +16,9 @@ from repro.configs import get_arch
 from repro.core.quant import quantize_int4
 from repro.kernels.int4_matmul.ops import w4a16_linear
 from repro.models import transformer as tf
-from repro.serve.engine import ServeEngine
+from repro.serve.api import EngineConfig
+from repro.serve.core import EngineCore
+from repro.serve.runners.lm import LMRunner
 
 
 def main():
@@ -37,8 +39,12 @@ def main():
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     print(f"arch={cfg.name} (reduced), serving fp32 vs int4-weight numerics")
     for bits in (0, 4):
-        engine = ServeEngine(cfg, params, batch_slots=4, max_seq=64, quant_bits=bits)
-        out = engine.generate([[1, 2, 3], [9, 8], [5], [12, 13, 14]], args.tokens)
+        runner = LMRunner(cfg, params, max_seq=64, quant_bits=bits)
+        core = EngineCore(runner, EngineConfig(slots=4))
+        ids = [core.submit(p, max_new_tokens=args.tokens)
+               for p in ([1, 2, 3], [9, 8], [5], [12, 13, 14])]
+        results = core.run_until_complete()
+        out = [results[i].outputs for i in ids]
         print(f"  w{bits or 16}: {[o[-args.tokens:] for o in out]}")
 
     # the production-path kernel: packed int4 weights, dequant in VMEM

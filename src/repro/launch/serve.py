@@ -4,6 +4,10 @@
     PYTHONPATH=src python -m repro.launch.serve --workload snn --requests 6 --int4
     PYTHONPATH=src python -m repro.launch.serve --workload snn --scheduler sparsity --mixed-trace
 
+    # chunked prefill + latency SLOs (budgeted-session serving):
+    PYTHONPATH=src python -m repro.launch.serve --workload lm \\
+        --prefill-chunk 16 --scheduler slo --slo-ms 3000
+
     # data-mesh sharded SNN serving (slot batch split over 2 devices):
     XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
         PYTHONPATH=src python -m repro.launch.serve --workload snn --data-shard 2
@@ -26,7 +30,8 @@ from .train import reduce_cfg
 
 def engine_config(args) -> EngineConfig:
     return EngineConfig(slots=args.slots, admission=args.admission,
-                        scheduler=args.scheduler)
+                        scheduler=args.scheduler,
+                        prefill_chunk=args.prefill_chunk)
 
 
 def serve_lm(args) -> None:
@@ -46,12 +51,40 @@ def serve_lm(args) -> None:
         length = int(jax.random.randint(k1, (), 1, 6))
         prompts.append([int(t) for t in
                         jax.random.randint(k2, (length,), 1, cfg.vocab)])
-    ids = [core.submit(p, max_new_tokens=args.tokens) for p in prompts]
+    deadline = args.slo_ms / 1000.0 if args.slo_ms > 0 else None
+    if deadline is not None:
+        # wall-clock SLOs start at submit(): warm the jit caches first so
+        # no XLA compile lands inside a sub-second deadline. Two layers:
+        # the same trace (the launch widths this run's prompts produce),
+        # plus every pow2-bucketed width up to the SLO scheduler's boost
+        # cap, since its budget split can boost a prefill chunk past
+        # --prefill-chunk mid-deadline.
+        from ..serve.api import Request, StepBudget
+        from ..serve.scheduler import SLOScheduler
+        warm = EngineCore(runner, engine_config(args))
+        for p in prompts:
+            warm.submit(p, max_new_tokens=args.tokens)
+        warm.run_until_complete()
+        # runtime launch widths are pow2-bucketed by the session, so this
+        # loop covers every width the boost can reach: chunk w produces a
+        # take of min(w, prompt) whose bucket is w (the last iteration's
+        # shorter max_seq-bounded prompt still buckets up to w)
+        w, cap = 2, SLOScheduler.DEFAULT_BOOST_CAP
+        while w <= cap and w // 2 < args.seq - 2:
+            plen = min(w + 1, args.seq - 2)
+            sess = runner.open_session(args.slots)
+            sess.admit(0, Request(-1, [1] * plen, {"max_new_tokens": 1}))
+            sess.step(StepBudget(chunk=w))
+            w *= 2
+    ids = [core.submit(p, max_new_tokens=args.tokens, deadline_s=deadline)
+           for p in prompts]
     results = core.run_until_complete()
     for i, rid in enumerate(ids):
         res = results[rid]
-        print(f"req{rid}: prompt={prompts[i]} -> {res.outputs[len(prompts[i]):]} "
-              f"stats={dict(res.stats)}")
+        # expired-in-queue requests never produced outputs
+        new = res.outputs[len(prompts[i]):] if res.outputs is not None else None
+        print(f"req{rid}: prompt={prompts[i]} -> {new} "
+              f"status={res.status} stats={dict(res.stats)}")
     print(f"engine: {core.stats()}")
 
 
@@ -118,11 +151,25 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--img-hw", type=int, default=0, help="SNN image size override")
     ap.add_argument("--int4", action="store_true", help="int4-weight numerics")
-    ap.add_argument("--scheduler", choices=("fifo", "sparsity"), default="fifo",
-                    help="batch-composition policy (serve.scheduler)")
+    ap.add_argument("--scheduler",
+                    choices=("fifo", "sparsity", "slo", "slo:fifo",
+                             "slo:sparsity"),
+                    default="fifo",
+                    help="batch-composition policy (serve.scheduler); the "
+                         "slo* forms add deadline/priority admission and "
+                         "per-step budget splitting")
     ap.add_argument("--admission", choices=("continuous", "batch"),
                     default="continuous",
                     help="step-level admission vs run-to-completion batching")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="LM continuous admission: prompt tokens a joining "
+                         "request prefills per engine step (1 = token-by-"
+                         "token; larger chunks keep decode goodput up while "
+                         "long prompts join; outputs are bit-identical)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="LM: per-request latency SLO in milliseconds "
+                         "(wall clock); expired requests surface "
+                         "status='expired'. Pair with --scheduler slo")
     ap.add_argument("--mixed-trace", action="store_true",
                     help="SNN: alternate near-silent and dense requests")
     ap.add_argument("--data-shard", type=int, default=0,
@@ -130,6 +177,9 @@ def main():
                          "(a ('data',) mesh; needs the devices to exist)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.slo_ms > 0 and args.admission == "batch":
+        ap.error("--slo-ms requires --admission continuous "
+                 "(deadlines are step-level; the batch path ignores them)")
 
     if args.workload == "snn":
         serve_snn(args)

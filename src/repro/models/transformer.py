@@ -374,6 +374,44 @@ def decode_step(params: Dict, cache: Dict, batch: Dict, pos: jax.Array,
     return logits, {"periods": new_period_cache, "tail": tuple(new_tail)}
 
 
+def decode_chunk(params: Dict, cache: Dict, tokens: jax.Array, pos0: jax.Array,
+                 take: jax.Array, cfg: ArchConfig,
+                 active: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Chunk-masked multi-token decode: per-row ragged token chunks.
+
+    tokens: int32 [B, C] — row i consumes ``tokens[i, :take[i]]`` at
+    positions ``pos0[i] .. pos0[i] + take[i] - 1``; columns at or past
+    ``take[i]`` are masked out for that row (caches frozen, outputs
+    ignored), so rows with different chunk lengths share one launch. This
+    is the serving engine's chunked prefill: a joining prompt consumes a
+    scheduler-sized chunk of prompt tokens in the same call its slot-mates
+    decode their single token in (their ``take`` is 1).
+
+    Semantically this IS C sequential `decode_step` calls with per-column
+    active masks, fused into one jitted scan — bit-identity with the
+    token-by-token path holds by construction for every chunk size.
+
+    Returns (picks [B, C] int32 greedy argmax per consumed column — rows
+    read their own entry at column ``take[i] - 1``; masked columns carry
+    garbage — and the updated cache).
+    """
+    b, c = tokens.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    take = jnp.asarray(take, jnp.int32)
+    base = jnp.ones((b,), bool) if active is None else active
+
+    def body(cache, xs):
+        t, tok = xs                              # t scalar column, tok [B]
+        act = base & (t < take)
+        logits, cache = decode_step(params, cache, {"tokens": tok[:, None]},
+                                    pos0 + t, cfg, active=act)
+        return cache, jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    cache, picks = jax.lax.scan(
+        body, cache, (jnp.arange(c, dtype=jnp.int32), tokens.T))
+    return picks.T, cache                        # [B, C]
+
+
 def prefill_step(params: Dict, batch: Dict, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
     """Prefill: forward over the prompt, returning last-position logits.
 

@@ -3,14 +3,17 @@
 See README.md in this directory for the Request/Result/Runner API.
 """
 from .api import (EngineConfig, ModelRunner, PAD_REQUEST_ID, QueueFull,
-                  Request, Result, RunnerSession)
-from .core import EngineCore
+                  Request, Result, RunnerSession, SlotProgress, StepBudget,
+                  StepReport)
+from .core import EngineCore, StepClock
 from .engine import ServeEngine
-from .scheduler import (FIFOScheduler, Scheduler, SparsityAwareScheduler,
-                        make_scheduler)
+from .scheduler import (FIFOScheduler, Scheduler, SLOScheduler,
+                        SparsityAwareScheduler, make_scheduler)
 
 __all__ = [
     "EngineConfig", "EngineCore", "FIFOScheduler", "ModelRunner",
     "PAD_REQUEST_ID", "QueueFull", "Request", "Result", "RunnerSession",
-    "Scheduler", "ServeEngine", "SparsityAwareScheduler", "make_scheduler",
+    "SLOScheduler", "Scheduler", "ServeEngine", "SlotProgress",
+    "SparsityAwareScheduler", "StepBudget", "StepClock", "StepReport",
+    "make_scheduler",
 ]

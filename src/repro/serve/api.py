@@ -31,14 +31,39 @@ class Request:
     payload is workload-defined: a token-id list for the LM runner, an
     [H, W, C] image for the SNN runner. options carry per-request knobs the
     runner understands (e.g. ``max_new_tokens`` for the LM).
+
+    deadline_s/priority are scheduler-facing lifecycle knobs (first-class,
+    not options, because the engine itself acts on them):
+
+    deadline_s: latency SLO in engine-clock seconds *relative to submission*.
+                A request past ``arrival_s + deadline_s`` at a step boundary
+                is retired with ``Result.status == 'expired'`` (queued or
+                resident; residents surface their partial progress). None =
+                no deadline.
+    priority:   strict admission class for deadline-aware schedulers;
+                higher wins over any deadline in a lower class, and the
+                tightest deadline wins within a class. Ignored by
+                FIFO/sparsity.
+    arrival_s:  engine-clock timestamp stamped by `EngineCore.submit` —
+                the reference point for ``deadline_s``.
     """
     request_id: int
     payload: Any
     options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    deadline_s: Optional[float] = None
+    priority: int = 0
+    arrival_s: float = 0.0
 
     @property
     def is_pad(self) -> bool:
         return self.request_id < 0
+
+    @property
+    def deadline_at(self) -> Optional[float]:
+        """Absolute engine-clock deadline, or None."""
+        if self.deadline_s is None:
+            return None
+        return self.arrival_s + self.deadline_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,13 +107,103 @@ class Result:
                          improves for sparse requests by not co-batching
                          them with dense stragglers.
 
+    ``ts_occupancy``     per-layer dict of length-T lists: the fraction of
+                         this request's folded matmul rows that carried at
+                         least one spike at each timestep — the per-timestep
+                         sparsity trace streamed through
+                         `EngineCore.poll_partial` while a request is being
+                         served.
+
     LM result stats: ``prompt_len`` (tokens), ``padded_len`` (prompt length
-    after bucket padding; equals ``prompt_len`` under continuous admission,
-    which feeds prompts unpadded), ``new_tokens`` (decode budget).
+    after bucket padding; the continuous-admission runner feeds prompts
+    unpadded and *asserts* ``padded_len == prompt_len``), ``new_tokens``
+    (decode budget), ``prefill_chunks`` (session steps that consumed at
+    least one prompt token — ``ceil(prompt_len / chunk)`` under chunked
+    prefill), ``ttft_steps`` (session steps from admission through the step
+    that emitted the first generated token).
+
+    status: lifecycle outcome — 'ok' (ran to completion), 'cancelled'
+    (caller `EngineCore.cancel`), or 'expired' (deadline passed before
+    completion). Non-'ok' results carry whatever partial outputs/stats the
+    runner had produced.
     """
     request_id: int
     outputs: Any
     stats: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    status: str = "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBudget:
+    """How much work one `RunnerSession.step` may perform, in workload-native
+    units (LM: prompt+decode tokens; SNN: timesteps of the fused graph).
+
+    Decoupling the work a step performs from the wall-clock step itself is
+    the decoupled-processing-time idea (arXiv:2311.14447) applied to the
+    serving seam: the scheduler spends budget where latency matters.
+
+    units:    total units the whole step may consume (all slots summed), or
+              None for no cap. Sessions never starve a slot below one unit —
+              the cap trims *extra* prefill allowance, slot-index order.
+    chunk:    default per-slot prefill allowance: how many prompt tokens a
+              prefilling LM slot may consume this step (decode slots always
+              consume exactly one). 1 reproduces token-by-token prefill.
+    per_slot: optional per-slot overrides of ``chunk`` — the scheduler's
+              budget *split* (e.g. boost the slot racing a deadline).
+    """
+    units: Optional[int] = None
+    chunk: int = 1
+    per_slot: Optional[Mapping[int, int]] = None
+
+    def for_slot(self, slot: int) -> int:
+        """Prefill allowance for one slot index (always >= 1)."""
+        if self.per_slot is not None and slot in self.per_slot:
+            return max(1, int(self.per_slot[slot]))
+        return max(1, int(self.chunk))
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotProgress:
+    """One occupied slot's progress after a session step.
+
+    phase:       workload-defined label ('prefill' | 'decode' for the LM,
+                 'infer' for the SNN).
+    units_done / consumed vs total work in the budget's units (LM: prompt +
+    units_total: budgeted decode tokens; SNN: timesteps).
+    emitted:     partial outputs produced *this step* — new tokens for the
+                 LM, per-timestep sparsity stats for the SNN. The engine
+                 accumulates these per request for `EngineCore.poll_partial`.
+    """
+    request_id: int
+    phase: str
+    units_done: int
+    units_total: int
+    emitted: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class StepReport:
+    """What one `RunnerSession.step` actually did.
+
+    finished: results for the slots that completed this step (their slot
+              indices are free again) — the old ``step()`` return value.
+    progress: per-occupied-slot `SlotProgress` (finished slots included, so
+              their last partials are not lost).
+    cost:     measured cost of the step in workload-native units, e.g.
+              ``{'units': 9, 'prompt_tokens': 8, 'decode_tokens': 1}`` (LM)
+              or ``{'units': 8, 'timesteps': 4}`` (SNN). LM semantics:
+              ``units`` is forward work (token positions processed),
+              ``prompt_tokens`` the prompt tokens consumed out of it, and
+              ``decode_tokens`` the tokens *emitted* — on the step that
+              consumes a row's last prompt token the same forward pass
+              also emits its first decode token, so ``prompt_tokens +
+              decode_tokens`` may exceed ``units``. Schedulers fold these,
+              with the engine-measured wall seconds, into their cost
+              models (`SLOScheduler`).
+    """
+    finished: Mapping[int, Result] = dataclasses.field(default_factory=dict)
+    progress: Mapping[int, SlotProgress] = dataclasses.field(default_factory=dict)
+    cost: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,14 +224,24 @@ class EngineConfig:
                policy: one `step` forms one same-bucket batch and runs it to
                completion.
     scheduler: batch-composition policy name, resolved by
-               `scheduler.make_scheduler`: 'fifo' (arrival order) or
+               `scheduler.make_scheduler`: 'fifo' (arrival order),
                'sparsity' (co-batch by observed/predicted tile-skip rate,
-               EWMA-learned from per-request `Result` stats).
+               EWMA-learned from per-request `Result` stats), or 'slo'
+               (deadline/priority admission + per-step budget split;
+               composes over an inner policy — 'slo:sparsity').
+    prefill_chunk: default `StepBudget.chunk` for continuous admission —
+               prompt tokens a joining LM request prefills per engine step,
+               interleaved with resident decode rows in the same launch.
+               1 reproduces token-by-token prefill; larger values stop long
+               prompts from holding goodput down for their whole prefill.
+               Bit-identical outputs for any value (chunking only regroups
+               the same masked per-token launches).
     """
     slots: int = 8
     max_queue: int = 256
     admission: str = "continuous"
     scheduler: str = "fifo"
+    prefill_chunk: int = 1
 
 
 class QueueFull(RuntimeError):
@@ -166,15 +291,16 @@ class ModelRunner(Protocol):
 
 @runtime_checkable
 class RunnerSession(Protocol):
-    """A live fixed-width batch the engine admits into between iterations.
+    """A live fixed-width batch the engine admits into between steps.
 
     The engine drives the session as: ``admit`` requests into free slot
-    indices, then ``step`` to advance every occupied slot by one iteration
-    (one decode token for the LM; one fused T-timestep batch for the SNN).
-    Slots the engine never admitted into are the runner's problem to pad
-    (inactive rows for the LM, zero images for the SNN) — the engine only
-    guarantees it will not reuse a slot index before the session reported
-    the previous occupant finished.
+    indices, then ``step(budget)`` to advance every occupied slot by up to
+    the budgeted amount of work (prompt/decode tokens for the LM; one fused
+    T-timestep batch for the SNN). Slots the engine never admitted into are
+    the runner's problem to pad (inactive rows for the LM, zero images for
+    the SNN) — the engine only guarantees it will not reuse a slot index
+    before the session reported (or ``cancel`` reclaimed) the previous
+    occupant.
     """
 
     def admit(self, slot: int, request: Request) -> Optional[Result]:
@@ -183,7 +309,14 @@ class RunnerSession(Protocol):
         `Result`; returns None when the request will run in coming steps."""
         ...
 
-    def step(self) -> Mapping[int, Result]:
-        """Advance every occupied slot one iteration; returns results for
-        the slots that finished this step (their indices are free again)."""
+    def step(self, budget: StepBudget) -> StepReport:
+        """Advance every occupied slot by up to ``budget`` work; returns a
+        `StepReport` with finished results, per-slot progress + partial
+        outputs, and the step's measured cost."""
+        ...
+
+    def cancel(self, slot: int) -> Result:
+        """Reclaim ``slot`` without perturbing its neighbours; returns a
+        partial `Result` (outputs so far, ``status='cancelled'``) for the
+        evicted occupant. The slot index is free for reuse afterwards."""
         ...

@@ -12,20 +12,41 @@ and delegates tensors to an `api.ModelRunner`. The same `submit()` /
 Two admission policies (``EngineConfig.admission``):
 
 * ``'continuous'`` (default) — step-level admission. The engine holds one
-  live `api.RunnerSession` per session key; each `step()` first asks the
-  scheduler to refill freed slots from the queue, then advances the session
-  one iteration. For the LM an iteration is one token — a newly admitted
-  request prefills its prompt token-by-token in the same `decode_step`
-  launches its slot-mates decode in (per-row positions + ``active`` cache
-  masking keep it bit-identical to a solo run), so a freed KV-cache slot
-  never idles while other requests still decode. For the SNN an iteration is
-  one fused T-timestep batch: freed (zero-image padding) slots are refilled
-  with real work every step. Requests with different decode budgets
-  co-reside; nothing waits for a bucket.
+  live `api.RunnerSession` per session key; each `step()` first retires
+  expired requests, asks the scheduler to refill freed slots from the
+  queue, plans a work budget (`api.StepBudget` — default
+  ``EngineConfig.prefill_chunk``, or the scheduler's ``plan_step`` split),
+  then advances the session by that budget. For the LM a step consumes one
+  decode token per resident plus up to ``chunk`` prompt tokens per
+  prefilling slot — a newly admitted request prefills its prompt in
+  scheduler-sized chunks in the same launches its slot-mates decode in
+  (per-row positions + ``active`` cache masking keep it bit-identical to a
+  solo run), so a long prompt no longer holds goodput down for its whole
+  prefill and a freed KV-cache slot never idles while other requests still
+  decode. For the SNN a step is one fused T-timestep batch: freed
+  (zero-image padding) slots are refilled with real work every step.
+  Requests with different decode budgets co-reside; nothing waits for a
+  bucket.
 * ``'batch'`` — the PR-2 run-to-completion policy: one `step()` forms one
   batch (scheduler-composed, same `bucket_key`), pads it to the slot count
   and runs it to completion. Kept for offline/throughput use and as the
-  reference semantics.
+  reference semantics. Budgets, deadlines and partial results are
+  continuous-admission concepts; the batch path ignores them.
+
+Request lifecycle beyond completion (continuous admission):
+
+* **streaming** — every `api.StepReport` carries per-slot partial outputs
+  (`SlotProgress.emitted`: new LM tokens, per-timestep SNN stats); the
+  engine accumulates them per request for `poll_partial`.
+* **cancellation** — `cancel(request_id)` removes a queued request or
+  reclaims a resident's slot via `RunnerSession.cancel` (row-independence
+  keeps neighbours bit-identical); the `Result` carries
+  ``status='cancelled'`` and whatever partial outputs existed.
+* **deadlines** — requests submitted with ``deadline_s`` are retired with
+  ``status='expired'`` once the engine clock passes their deadline
+  (queued or resident), and a scheduler ``expire`` hook may evict
+  provably-late residents early. The clock is injectable (``clock=``) so
+  tests and benchmarks can drive deadlines deterministically in steps.
 
 Per-step occupancy/goodput accounting lives on `stats()`; the admission
 history (which requests entered which step) on `admission_log`.
@@ -33,11 +54,34 @@ history (which requests entered which step) on `admission_log`.
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
 from .api import (EngineConfig, ModelRunner, QueueFull, Request, Result,
-                  RunnerSession)
+                  RunnerSession, SlotProgress, StepBudget)
 from .scheduler import Scheduler, make_scheduler
+
+
+class StepClock:
+    """Deterministic engine clock: one 'second' per completed engine step.
+
+    Deadlines expressed in steps make SLO behavior machine-independent.
+    `EngineCore` auto-attaches itself to an unattached clock it is
+    constructed with, so the usual form is just::
+
+        core = EngineCore(runner, config, clock=StepClock())
+    """
+
+    def __init__(self):
+        self.core: Optional["EngineCore"] = None
+
+    def attach(self, core: "EngineCore") -> "StepClock":
+        self.core = core
+        return self
+
+    def __call__(self) -> float:
+        return 0.0 if self.core is None else float(self.core._steps_run)
 
 
 class _Slot:
@@ -66,7 +110,8 @@ class EngineCore:
     """Fixed-slot admission queue + pluggable scheduler over a `ModelRunner`."""
 
     def __init__(self, runner: ModelRunner, config: EngineConfig = EngineConfig(),
-                 scheduler: Optional[Scheduler] = None):
+                 scheduler: Optional[Scheduler] = None,
+                 clock: Callable[[], float] = time.monotonic):
         assert config.admission in ("continuous", "batch"), config.admission
         self.runner = runner
         self.config = config
@@ -79,25 +124,52 @@ class EngineCore:
         self._resident: Dict[int, Request] = {}
         self._session: Optional[RunnerSession] = None
         self._session_key: Optional[Hashable] = None
+        #: engine clock: deadlines and arrival stamps are measured on it.
+        #: Wall time by default; tests/benchmarks inject a step counter for
+        #: deterministic deadline behavior. An unattached `StepClock` (or
+        #: anything with the same attach/core surface) is bound to this
+        #: engine here, so forgetting the attach call cannot silently
+        #: freeze the clock at 0.
+        if getattr(clock, "core", False) is None and callable(
+                getattr(clock, "attach", None)):
+            clock.attach(self)
+        self._clock = clock
+        # request_id -> partial outputs emitted but not yet polled
+        self._partials: Dict[int, List[Any]] = {}
+        # slot index -> last SlotProgress (scheduler budget/evict input)
+        self._progress: Dict[int, SlotProgress] = {}
         # accounting
         self._batches_run = 0          # runner invocations (compute steps)
         self._requests_done = 0
+        self._cancelled = 0
+        self._expired = 0
         self._steps_run = 0            # compute steps (== batches_run today)
         self._occupied_slot_steps = 0  # sum over steps of occupied slots
+        self._decode_tokens = 0        # LM decode tokens emitted (goodput)
+        self._work_units = 0           # budget units consumed (StepReport.cost)
         #: [(step_index, [request_ids admitted])] — the scheduler's decisions,
         #: in order; tests and benchmarks read batch composition off this.
         self.admission_log: List[Tuple[int, List[int]]] = []
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, payload: Any, **options: Any) -> int:
-        """Admit one request; returns its id. Raises `QueueFull` at capacity."""
+    def submit(self, payload: Any, *, deadline_s: Optional[float] = None,
+               priority: int = 0, **options: Any) -> int:
+        """Admit one request; returns its id. Raises `QueueFull` at capacity.
+
+        deadline_s: optional latency SLO in engine-clock seconds from now —
+        the request is retired with ``status='expired'`` if it has not
+        completed by then. priority: admission tie-break for deadline-aware
+        schedulers (higher wins).
+        """
         if len(self._queue) >= self.config.max_queue:
             raise QueueFull(
                 f"admission queue at capacity ({self.config.max_queue})")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, payload, dict(options)))
+        self._queue.append(Request(rid, payload, dict(options),
+                                   deadline_s=deadline_s, priority=priority,
+                                   arrival_s=self._clock()))
         return rid
 
     def pending(self) -> int:
@@ -111,8 +183,81 @@ class EngineCore:
 
     def poll(self, request_id: int) -> Optional[Result]:
         """Return (and retire) the result for ``request_id``, or None if it
-        has not completed yet."""
-        return self._results.pop(request_id, None)
+        has not completed yet. Retiring a result also drops its undrained
+        partials (the full outputs are on the `Result`)."""
+        res = self._results.pop(request_id, None)
+        if res is not None:
+            self._partials.pop(request_id, None)
+        return res
+
+    def poll_partial(self, request_id: int) -> List[Any]:
+        """Drain the partial outputs streamed for ``request_id`` since the
+        last call: new tokens for LM requests, per-timestep sparsity stats
+        for SNN requests (`api.SlotProgress.emitted`). Empty list when
+        nothing new was emitted; works while the request is in flight and —
+        until the final `Result` is polled — after completion."""
+        return self._partials.pop(request_id, [])
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def cancel(self, request_id: int, *, status: str = "cancelled") -> bool:
+        """Cancel a queued or resident request; False if the engine does not
+        hold it (already completed, polled, or never submitted).
+
+        The `Result` (retrievable via `poll`) carries ``status`` and, for a
+        resident request, its partial outputs. Reclaiming the slot does not
+        perturb slot-mates: sessions are row-independent and the freed row's
+        state is re-zeroed before reuse, exactly as on normal completion.
+        """
+        for req in self._queue:
+            if req.request_id == request_id:
+                self._queue.remove(req)
+                res = Result(request_id, None, stats={}, status=status)
+                # the scheduler may hold queue-side state for this request
+                # (e.g. pass-over counters); let it retire that too
+                self.scheduler.observe(req, res)
+                self._results[request_id] = res
+                self._count_retired(status)
+                return True
+        if request_id not in self._resident:
+            return False
+        slot = next(s for s in self.slots if s.request_id == request_id)
+        res = self._session.cancel(slot.index)
+        assert res.request_id == request_id, (res.request_id, request_id)
+        if res.status != status:
+            res = dataclasses.replace(res, status=status)
+        req = self._resident.pop(request_id)
+        self.scheduler.observe(req, res)
+        self._results[request_id] = res
+        self._progress.pop(slot.index, None)
+        slot.release()
+        self._count_retired(status)
+        return True
+
+    def _count_retired(self, status: str) -> None:
+        if status == "expired":
+            self._expired += 1
+        else:
+            self._cancelled += 1
+
+    def _expire_due(self, now: float) -> None:
+        """Retire every request whose deadline has passed: queued ones drop
+        with an empty result, residents are evicted with their partial
+        progress. A scheduler ``expire`` hook may additionally evict
+        residents that are predicted (by a lower-bound estimate) to miss."""
+        for req in [r for r in self._queue
+                    if r.deadline_at is not None and now >= r.deadline_at]:
+            self.cancel(req.request_id, status="expired")
+        for rid, req in list(self._resident.items()):
+            if req.deadline_at is not None and now >= req.deadline_at:
+                self.cancel(rid, status="expired")
+        hook = getattr(self.scheduler, "expire", None)
+        if hook is not None and self._resident:
+            residents = {s.index: self._resident[s.request_id]
+                         for s in self.slots if s.request_id is not None}
+            for rid in hook(residents, dict(self._progress), now=now):
+                if rid in self._resident:
+                    self.cancel(rid, status="expired")
 
     # -- scheduling ---------------------------------------------------------
 
@@ -132,6 +277,8 @@ class EngineCore:
         while self._queue or self.in_flight():
             self.step()
         out, self._results = self._results, {}
+        for rid in out:
+            self._partials.pop(rid, None)
         return out
 
     def _take_from_queue(self, picks: List[Request], key_fn) -> Hashable:
@@ -156,6 +303,11 @@ class EngineCore:
 
     def _step_continuous(self) -> int:
         done = 0
+        now = self._clock()
+        tick = getattr(self.scheduler, "on_clock", None)
+        if tick is not None:        # select()'s signature carries no clock
+            tick(now)
+        self._expire_due(now)
         free = [s for s in self.slots if s.request_id is None]
         resident = self.config.slots - len(free)
         if (resident and self._queue
@@ -198,14 +350,35 @@ class EngineCore:
         occupied = [s for s in self.slots if s.request_id is not None]
         if not occupied:
             return done
-        finished = self._session.step()
-        self._steps_run += 1
-        self._batches_run += 1
+
+        budget = StepBudget(chunk=self.config.prefill_chunk)
+        plan = getattr(self.scheduler, "plan_step", None)
+        if plan is not None:
+            residents = {s.index: self._resident[s.request_id] for s in occupied}
+            budget = plan(residents, dict(self._progress), now=now,
+                          default=budget)
+        t0 = self._clock()
+        report = self._session.step(budget)
+        self._steps_run += 1          # before the clock read: a step-counting
+        self._batches_run += 1        # clock must see this step as elapsed
+        seconds = self._clock() - t0
         self._occupied_slot_steps += len(occupied)
-        for idx, res in finished.items():
+        self._decode_tokens += int(report.cost.get("decode_tokens", 0))
+        self._work_units += int(report.cost.get("units", 0))
+
+        self._progress = dict(report.progress)
+        for prog in report.progress.values():
+            if prog.emitted:
+                self._partials.setdefault(prog.request_id, []).extend(prog.emitted)
+        hook = getattr(self.scheduler, "on_report", None)
+        if hook is not None:
+            hook(report, seconds=seconds, now=self._clock())
+
+        for idx, res in report.finished.items():
             slot = self.slots[idx]
             assert slot.request_id == res.request_id, (slot.request_id,
                                                        res.request_id)
+            self._progress.pop(idx, None)
             self._complete(slot, res)
             done += 1
         return done
@@ -259,16 +432,26 @@ class EngineCore:
             "batches_run": self._batches_run,
             "steps_run": steps,
             "requests_done": self._requests_done,
+            "cancelled": self._cancelled,
+            "expired": self._expired,
             "pending": len(self._queue),
             "in_flight": self.in_flight(),
             "slots": self.config.slots,
             "slot_served": served,
             "admission": self.config.admission,
             "scheduler": getattr(self.scheduler, "name", type(self.scheduler).__name__),
+            "prefill_chunk": self.config.prefill_chunk,
             # mean fraction of slots holding real work per compute step
             "slot_occupancy": (self._occupied_slot_steps
                                / (steps * self.config.slots) if steps else 0.0),
             # requests retired per compute step (continuous: tokens cost
             # steps, so LM goodput < 1; SNN completes whole slots per step)
             "goodput_req_per_step": (self._requests_done / steps if steps else 0.0),
+            # budget-units consumed and LM decode tokens emitted, total and
+            # per step — decode goodput is what chunked prefill raises: the
+            # same decode work packs into fewer wall-clock steps
+            "work_units": self._work_units,
+            "decode_tokens": self._decode_tokens,
+            "goodput_decode_tok_per_step": (self._decode_tokens / steps
+                                            if steps else 0.0),
         }

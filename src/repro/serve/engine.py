@@ -1,16 +1,19 @@
-"""Back-compat shim: `ServeEngine` over the unified serving core.
+"""DEPRECATED back-compat alias: `ServeEngine` over the unified serving core.
 
-The real machinery now lives in `serve.api` (Request/Result/ModelRunner),
-`serve.core` (EngineCore: fixed-slot admission queue, pluggable scheduler,
-continuous or run-to-completion admission) and `serve.runners.lm`
-(prefill-scan + greedy decode, with per-request prompt-length masking).
-This class keeps the seed's constructor and ``generate`` signature for
-existing callers/tests and simply routes through an `EngineCore` with an
-`LMRunner` under the default continuous admission (numerics are identical
-either way: every request decodes exactly as if served alone).
+The seed-era engine is fully retired: `serve.api` owns the request/result
+vocabulary (now including `StepBudget`/`StepReport`), `serve.core.EngineCore`
+owns admission/slots/lifecycle, and `serve.runners.lm.LMRunner` owns the LM
+tensors. Every in-repo call site constructs those directly
+(``EngineCore(LMRunner(cfg, params, ...))``); this alias exists for one
+release so external callers get a `DeprecationWarning` instead of an
+ImportError, and carries no machinery of its own — the eagerly-built
+engine-owned prefill path the PR-2 shim still dragged along is gone (the
+runner's batch-prefill scan lives in `LMRunner.run`, compiled only when the
+batch admission path actually uses it).
 """
 from __future__ import annotations
 
+import warnings
 from typing import List
 
 from ..configs.base import ArchConfig
@@ -20,14 +23,22 @@ from .runners.lm import LMRunner
 
 
 class ServeEngine:
-    """Greedy batched generation over the unified LM (compat wrapper)."""
+    """Deprecated alias for ``EngineCore(LMRunner(...))`` — use those."""
 
     def __init__(self, cfg: ArchConfig, params, *, batch_slots: int = 8,
                  max_seq: int = 512, quant_bits: int = 0):
+        warnings.warn(
+            "serve.engine.ServeEngine is deprecated; build "
+            "EngineCore(LMRunner(cfg, params, max_seq=..., quant_bits=...), "
+            "EngineConfig(slots=...)) directly. This alias will be removed "
+            "next release.",
+            DeprecationWarning, stacklevel=2)
+        # keep the PR-2 shim's public surface intact for the alias release
         self.cfg = cfg
         self.batch = batch_slots
         self.max_seq = max_seq
-        self.runner = LMRunner(cfg, params, max_seq=max_seq, quant_bits=quant_bits)
+        self.runner = LMRunner(cfg, params, max_seq=max_seq,
+                               quant_bits=quant_bits)
         self.core = EngineCore(self.runner, EngineConfig(slots=batch_slots))
 
     @property
@@ -36,10 +47,9 @@ class ServeEngine:
         return self.runner.params
 
     def generate(self, prompts: List[List[int]], num_tokens: int) -> List[List[int]]:
-        """Greedy-decode `num_tokens` for a batch of prompts. Each prompt is
-        prefilled against its own length (shorter prompts in a ragged batch
-        are no longer teacher-forced on pad zeros)."""
-        assert len(prompts) <= self.batch
+        """Greedy-decode `num_tokens` for a batch of prompts (see
+        `EngineCore.submit` / `run_until_complete`)."""
+        assert len(prompts) <= self.core.config.slots
         ids = [self.core.submit(p, max_new_tokens=num_tokens) for p in prompts]
         results = self.core.run_until_complete()
         return [results[i].outputs for i in ids]

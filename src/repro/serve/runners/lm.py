@@ -19,21 +19,29 @@ compatible requests.
 Continuous admission (``open_session``): the same per-row masking machinery,
 generalized from "ragged prompts in one batch" to "requests joining a live
 batch at arbitrary steps". An `_LMSession` holds one KV cache / recurrent
-state of width ``slots``; every session step is ONE `decode_step` in which
-each occupied slot consumes its own next token at its own position — a
-prompt token while prefilling (teacher-forced, argmax discarded until the
-last prompt position), its previously generated token while decoding.
-Free slots ride along with ``active=False`` (caches frozen, outputs
-ignored), and a newly freed slot's recurrent state is reset row-wise before
-reuse (`transformer.reset_cache_rows`; KV entries are position-masked so
-they need no reset). Because `decode_step` is row-independent, a request
-admitted mid-stream sees exactly the launches a solo run would give it —
-bit-identical outputs, which the tests assert.
+state of width ``slots``; every session step is ONE launch in which each
+occupied slot consumes its own next token(s) at its own position(s) — a
+budgeted *chunk* of prompt tokens while prefilling (teacher-forced, argmax
+discarded until the last prompt position), its previously generated token
+while decoding. The per-step work is set by the engine's `api.StepBudget`:
+with ``chunk == 1`` every step is one `decode_step` (token-by-token
+prefill, the PR-3 behavior); with ``chunk > 1`` prefilling rows consume up
+to ``chunk`` prompt tokens via `transformer.decode_chunk` — C sequential
+masked decode_steps fused in one jitted scan, with resident decode rows
+riding along at ``take == 1`` — so a long prompt stops holding goodput
+down for its whole prefill. Free slots ride along with ``active=False``
+(caches frozen, outputs ignored), and a newly freed slot's recurrent state
+is reset row-wise before reuse (`transformer.reset_cache_rows`; KV entries
+are position-masked so they need no reset). Because every launch is
+row-independent and chunking only regroups the same masked per-token
+updates, a request admitted mid-stream sees exactly the numerics a solo
+run would give it — bit-identical outputs for every chunk size, which the
+tests assert.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Hashable, List, Mapping, Optional, Sequence
+from typing import Dict, Hashable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +51,8 @@ from ...configs.base import ArchConfig
 from ...core.quant import fake_quant
 from ...core.tiling import round_up
 from ...models import transformer as tf
-from ..api import PAD_REQUEST_ID, Request, Result
+from ..api import (PAD_REQUEST_ID, Request, Result, SlotProgress, StepBudget,
+                   StepReport)
 
 
 def quantized_lm_params(params, bits: int):
@@ -85,6 +94,14 @@ class LMRunner:
             return nxt, cache                     # [B] greedy picks
 
         @jax.jit
+        def chunk_step(params, cache, tokens, pos0, take, active):
+            """One chunked mixed prefill/decode step: every row consumes its
+            own ragged token chunk at its own positions (decode rows take 1;
+            see `transformer.decode_chunk`). Greedy picks per column."""
+            return tf.decode_chunk(params, cache, tokens, pos0, take, cfg,
+                                   active=active)
+
+        @jax.jit
         def prefill(params, cache, toks, lens):
             """Masked teacher-forced prefill: one jit'd scan over the prompt
             block. Rows past their own prompt length freeze their caches, and
@@ -110,6 +127,7 @@ class LMRunner:
 
         self._step = step
         self._masked_step = masked_step
+        self._chunk_step = chunk_step
         self._prefill = prefill
 
     # -- ModelRunner protocol ------------------------------------------------
@@ -174,9 +192,10 @@ class _LMSession:
     """A live width-``slots`` decode batch requests join between tokens.
 
     Per-slot python state (prompt, emitted tokens, position, budget) steers
-    one shared jitted `decode_step` per engine step; the device state is the
-    session-wide KV cache / recurrent state. See the module docstring for
-    the equivalence argument.
+    one shared jitted launch per engine step — `decode_step` when every row
+    takes one token, `decode_chunk` when the budget lets prefilling rows
+    consume a chunk; the device state is the session-wide KV cache /
+    recurrent state. See the module docstring for the equivalence argument.
     """
 
     def __init__(self, runner: LMRunner, slots: int):
@@ -190,16 +209,27 @@ class _LMSession:
         self.pos = [0] * slots        # next position this slot consumes
         self.budget = [0] * slots
         self.next_tok = [0] * slots   # token the slot feeds next step
+        self.prefill_chunks = [0] * slots  # steps that consumed prompt tokens
+        self.steps_in = [0] * slots   # steps since admission
+        self.ttft = [0] * slots       # steps through the first emitted token
         self._stale: set = set()      # slots whose past occupant touched state
 
-    def _result(self, i: int) -> Result:
+    def _result(self, i: int, status: str = "ok") -> Result:
         req = self.req[i]
+        plen = len(self.prompt[i])
+        # continuous admission feeds prompts unpadded — `Result` documents
+        # padded_len == prompt_len. Enforce the invariant behind it: the
+        # outputs open with the prompt exactly as submitted (no bucket
+        # padding ever leaked into the stream) and the slot consumed no
+        # token position past its own prompt + emissions.
+        assert self.out[i][:plen] == self.prompt[i], (self.out[i], self.prompt[i])
         return Result(req.request_id, self.out[i], stats={
-            "prompt_len": len(self.prompt[i]),
-            # continuous admission feeds prompts unpadded: no bucket padding
-            "padded_len": len(self.prompt[i]),
+            "prompt_len": plen,
+            "padded_len": plen,
             "new_tokens": self.budget[i],
-        })
+            "prefill_chunks": self.prefill_chunks[i],
+            "ttft_steps": self.ttft[i],
+        }, status=status)
 
     def admit(self, slot: int, request: Request) -> Optional[Result]:
         assert self.req[slot] is None, f"slot {slot} busy"
@@ -213,6 +243,9 @@ class _LMSession:
         self.out[slot] = list(prompt)
         self.pos[slot] = 0
         self.budget[slot] = budget
+        self.prefill_chunks[slot] = 0
+        self.steps_in[slot] = 0
+        self.ttft[slot] = 0
         if budget == 0:               # nothing to generate: done on arrival
             res = self._result(slot)
             self.req[slot] = None
@@ -232,10 +265,41 @@ class _LMSession:
                 return res
         return None
 
-    def step(self) -> Mapping[int, Result]:
+    def cancel(self, slot: int) -> Result:
+        """Reclaim ``slot`` mid-flight. Neighbours are untouched (every
+        launch is row-independent); the evicted row's cache is re-zeroed
+        lazily before the slot's next occupant, exactly like a normal
+        completion."""
+        assert self.req[slot] is not None, f"slot {slot} empty"
+        res = self._result(slot, status="cancelled")
+        self.req[slot] = None
+        self._stale.add(slot)         # its prefill/decode advanced the state
+        return res
+
+    def _takes(self, occupied: List[int], budget: StepBudget) -> Dict[int, int]:
+        """Tokens each occupied slot consumes this step: decode slots take
+        exactly one; prefilling slots take up to their per-slot allowance
+        (never past their own prompt end). A total-units cap trims the
+        prefill extras in slot order, never below one token per slot."""
+        takes: Dict[int, int] = {}
+        for i in occupied:
+            remaining = len(self.prompt[i]) - self.pos[i]
+            takes[i] = min(budget.for_slot(i), remaining) if remaining > 1 else 1
+        if budget.units is not None:
+            total = sum(takes.values())
+            cap = max(int(budget.units), len(occupied))
+            for i in occupied:
+                if total <= cap:
+                    break
+                cut = min(takes[i] - 1, total - cap)
+                takes[i] -= cut
+                total -= cut
+        return takes
+
+    def step(self, budget: StepBudget = StepBudget()) -> StepReport:
         occupied = [i for i in range(self.slots) if self.req[i] is not None]
         if not occupied:
-            return {}
+            return StepReport()
         # re-zero state rows whose previous occupant advanced them, all in
         # one pass (KV entries are position-masked and would not need this;
         # rglru/xlstm recurrent state is cumulative and does). Fresh slots
@@ -247,29 +311,83 @@ class _LMSession:
             self.cache = tf.reset_cache_rows(self.cache, self._fresh,
                                              jnp.asarray(keep))
             self._stale.difference_update(stale)
-        tokens = jnp.asarray([[self.next_tok[i]] for i in range(self.slots)],
-                             jnp.int32)
+
+        takes = self._takes(occupied, budget)
+        width = max(takes.values())
+        if width > 1:
+            # pow2-bucket the launch width: every distinct width is its own
+            # XLA compile, and scheduler budget splits can request arbitrary
+            # chunks — bucketing bounds the compile set to log2(max chunk)
+            # kernels. Extra columns ride along fully masked (take < width),
+            # so numerics are unchanged.
+            width = 1 << (width - 1).bit_length()
         pos_vec = jnp.asarray(self.pos, jnp.int32)
         active = jnp.asarray([self.req[i] is not None for i in range(self.slots)])
-        nxt, self.cache = self.runner._masked_step(
-            self.runner.params, self.cache, tokens, pos_vec, active)
+        if width == 1:
+            # all rows take one token: the PR-3 single-token launch
+            tokens = jnp.asarray(
+                [[self.next_tok[i]] for i in range(self.slots)], jnp.int32)
+            nxt, self.cache = self.runner._masked_step(
+                self.runner.params, self.cache, tokens, pos_vec, active)
+            picks_dev, cols = nxt, {i: 0 for i in occupied}
+        else:
+            # ragged chunk: row i consumes tokens[i, :take[i]] — its own
+            # prompt slice while prefilling, its pending token at column 0
+            # while decoding (take == 1; later columns masked)
+            buf = np.zeros((self.slots, width), np.int32)
+            take_vec = np.zeros(self.slots, np.int32)
+            for i in occupied:
+                t = takes[i]
+                take_vec[i] = t
+                p, prompt = self.pos[i], self.prompt[i]
+                for j in range(t):
+                    buf[i, j] = prompt[p + j] if p + j < len(prompt) \
+                        else self.next_tok[i]
+            picks_dev, self.cache = self.runner._chunk_step(
+                self.runner.params, self.cache, jnp.asarray(buf), pos_vec,
+                jnp.asarray(take_vec), active)
+            cols = {i: takes[i] - 1 for i in occupied}
 
         finished: Dict[int, Result] = {}
+        progress: Dict[int, SlotProgress] = {}
         picks = None                  # fetched lazily: prefill-only steps skip it
+        prompt_toks = decode_toks = 0
         for i in occupied:
+            t = takes[i]
             p = self.pos[i]
-            self.pos[i] += 1
             plen = len(self.prompt[i])
-            if p < plen - 1:          # teacher-forced prefill: argmax discarded
-                self.next_tok[i] = self.prompt[i][p + 1]
-                continue
-            if picks is None:
-                picks = np.asarray(nxt)
-            tok = int(picks[i])       # p == plen-1: first generated token;
-            self.out[i].append(tok)   # p >= plen: steady-state decode
-            self.next_tok[i] = tok
-            if len(self.out[i]) - plen >= self.budget[i]:
+            was_prefill = p < plen
+            self.pos[i] += t
+            self.steps_in[i] += 1
+            if was_prefill:
+                self.prefill_chunks[i] += 1
+                prompt_toks += min(t, plen - p)
+            emitted = ()
+            if self.pos[i] < plen:    # still prefilling: argmax discarded
+                self.next_tok[i] = self.prompt[i][self.pos[i]]
+            else:
+                if picks is None:
+                    picks = np.asarray(picks_dev)
+                # pos crossed (or sits past) the prompt end: the pick at the
+                # row's last consumed column is a generated token
+                tok = int(picks[i, cols[i]] if picks.ndim == 2 else picks[i])
+                self.out[i].append(tok)
+                self.next_tok[i] = tok
+                emitted = (tok,)
+                decode_toks += 1
+                if self.ttft[i] == 0:
+                    self.ttft[i] = self.steps_in[i]
+            done = len(self.out[i]) - plen >= self.budget[i]
+            progress[i] = SlotProgress(
+                request_id=self.req[i].request_id,
+                phase="decode" if self.pos[i] >= plen else "prefill",
+                units_done=min(self.pos[i], plen) + max(0, len(self.out[i]) - plen),
+                units_total=plen + self.budget[i],
+                emitted=emitted)
+            if done:
                 finished[i] = self._result(i)
                 self.req[i] = None
                 self._stale.add(i)    # its decode steps advanced the state
-        return finished
+        cost = {"units": sum(takes.values()), "prompt_tokens": prompt_toks,
+                "decode_tokens": decode_toks}
+        return StepReport(finished=finished, progress=progress, cost=cost)

@@ -29,7 +29,7 @@ is a runner concern, engaged by wrapping engine stepping in
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, List, Mapping, Optional, Sequence
+from typing import Dict, Hashable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,7 +40,8 @@ from ...core.workload import (conv_workload, dense_input_workload, fc_workload)
 from ...dist.context import current_mesh
 from ...models.vgg9 import (VGG9Config, conv_names, vgg9_infer_hybrid,
                             vgg9_infer_hybrid_sharded)
-from ..api import PAD_REQUEST_ID, Request, Result
+from ..api import (PAD_REQUEST_ID, Request, Result, SlotProgress, StepBudget,
+                   StepReport)
 
 
 def _per_request_skip(row_occ: np.ndarray, block_m: int, rows: int,
@@ -68,6 +69,20 @@ def _per_request_skip(row_occ: np.ndarray, block_m: int, rows: int,
         occ = rb.reshape(-1, block_m, kt).any(axis=1)
         skip[b] = 1.0 - occ.sum() / occ.size
     return skip
+
+
+def _per_timestep_occupancy(row_occ: np.ndarray, rows: int,
+                            rows_per_slice: int, batch: int) -> np.ndarray:
+    """Per-request per-timestep active-row fraction, [T, B].
+
+    Rows of the folded matmul are ordered (t*batch + b)*rows_per_slice +
+    pixel, so slicing the 0/1 row occupancy back out by (t, b) gives each
+    request's sparsity *trace over timesteps* — the per-timestep stat the
+    engine streams through `poll_partial` while a request is in flight.
+    """
+    active = row_occ[:rows].any(axis=1).astype(np.float64)
+    t = rows // (batch * rows_per_slice)
+    return active.reshape(t, batch, rows_per_slice).mean(axis=2)
 
 
 class SNNRunner:
@@ -116,15 +131,21 @@ class SNNRunner:
                      for k, v in stats.items() if "in_spikes_per_image" in v}
 
         per_req_skip: Dict[str, np.ndarray] = {}
+        ts_occ: Dict[str, np.ndarray] = {}
         for name, st in stats.items():
             if "occ_map" not in st:
                 continue
             ks = plan.layer(name).kernel
             t = self.cfg.timesteps
+            rps = ks.m // (t * n)
+            row_occ = np.asarray(st["row_occ"])
             per_req_skip[name] = _per_request_skip(
-                np.asarray(st["row_occ"]), int(st["block_m"]), int(st["rows"]),
-                rows_per_slice=ks.m // (t * n), batch=n)
-        return np.asarray(logits), batch_skip, out_spikes, in_spikes, per_req_skip
+                row_occ, int(st["block_m"]), int(st["rows"]),
+                rows_per_slice=rps, batch=n)
+            ts_occ[name] = _per_timestep_occupancy(
+                row_occ, int(st["rows"]), rows_per_slice=rps, batch=n)
+        return (np.asarray(logits), batch_skip, out_spikes, in_spikes,
+                per_req_skip, ts_occ)
 
     def _run_sharded(self, images, n: int, ndev: int):
         """Split the slot batch over the data mesh (`vgg9_infer_hybrid_sharded`)
@@ -151,30 +172,38 @@ class SNNRunner:
                      for k, v in stats.items() if "in_spikes_per_image" in v}
 
         per_req_skip: Dict[str, np.ndarray] = {}
+        ts_occ: Dict[str, np.ndarray] = {}
         t = self.cfg.timesteps
         for name, st in stats.items():
             if "occ_map" not in st:
                 continue
             ks = plan.layer(name).kernel
+            rps = ks.m // (t * b_local)
             row_occ = np.asarray(st["row_occ"])
             skip = np.zeros(n)
+            occ_t = np.zeros((t, n))
             for d in range(ndev):
-                skip[d * b_local:(d + 1) * b_local] = _per_request_skip(
-                    row_occ[d], int(np.asarray(st["block_m"])[d]),
-                    int(np.asarray(st["rows"])[d]),
-                    rows_per_slice=ks.m // (t * b_local), batch=b_local)
+                sl = slice(d * b_local, (d + 1) * b_local)
+                rows_d = int(np.asarray(st["rows"])[d])
+                skip[sl] = _per_request_skip(
+                    row_occ[d], int(np.asarray(st["block_m"])[d]), rows_d,
+                    rows_per_slice=rps, batch=b_local)
+                occ_t[:, sl] = _per_timestep_occupancy(
+                    row_occ[d], rows_d, rows_per_slice=rps, batch=b_local)
             per_req_skip[name] = skip
-        return np.asarray(logits), batch_skip, out_spikes, in_spikes, per_req_skip
+            ts_occ[name] = occ_t
+        return (np.asarray(logits), batch_skip, out_spikes, in_spikes,
+                per_req_skip, ts_occ)
 
     def run(self, batch: Sequence[Request]) -> List[Result]:
         images = jnp.stack([jnp.asarray(r.payload) for r in batch])
         n = len(batch)
         ndev = self._data_shards(n)
         if ndev > 1:
-            logits, batch_skip, out_spikes, in_spikes, per_req_skip = \
+            logits, batch_skip, out_spikes, in_spikes, per_req_skip, ts_occ = \
                 self._run_sharded(images, n, ndev)
         else:
-            logits, batch_skip, out_spikes, in_spikes, per_req_skip = \
+            logits, batch_skip, out_spikes, in_spikes, per_req_skip, ts_occ = \
                 self._run_unsharded(images, n)
 
         # energy is priced with the full-slot-count plan in both modes so a
@@ -207,6 +236,8 @@ class SNNRunner:
                 "out_spikes": {k: float(v[i]) for k, v in out_spikes.items()},
                 "in_spikes": {k: float(v[i]) for k, v in in_spikes.items()},
                 "spike_total": float(sum(v[i] for v in out_spikes.values())),
+                "ts_occupancy": {k: [float(x) for x in v[:, i]]
+                                 for k, v in ts_occ.items()},
                 **energies[i],
                 **batch_stats,
             }))
@@ -274,15 +305,40 @@ class _SNNSession:
         self.req[slot] = request
         return None
 
-    def step(self) -> Mapping[int, Result]:
+    def cancel(self, slot: int) -> Result:
+        """An SNN request holds no device state between steps (the fused
+        graph runs whole); cancellation just frees the slot."""
+        assert self.req[slot] is not None, f"slot {slot} empty"
+        req = self.req[slot]
+        self.req[slot] = None
+        return Result(req.request_id, None, stats={}, status="cancelled")
+
+    def step(self, budget: StepBudget = StepBudget()) -> StepReport:
+        """One fused T-timestep batch. The SNN's work unit is the timestep;
+        the fused graph always spends all T per occupied slot (a partial-T
+        graph would be a different compilation), so the budget is reported
+        as cost rather than enforced. Each finished request's per-timestep
+        sparsity trace (input-row occupancy per mapped layer) is emitted as
+        T partial entries for `EngineCore.poll_partial`."""
         occupied = [i for i in range(self.slots) if self.req[i] is not None]
         if not occupied:
-            return {}
+            return StepReport()
         ref = self.req[occupied[0]]
         batch = [self.req[i] if self.req[i] is not None
                  else self.runner.filler(ref) for i in range(self.slots)]
         results = self.runner.run(batch)
-        finished = {i: results[i] for i in occupied}
+        t = self.runner.cfg.timesteps
+        finished = {}
+        progress = {}
         for i in occupied:
+            res = results[i]
+            trace = res.stats.get("ts_occupancy", {})
+            emitted = tuple({layer: vals[k] for layer, vals in trace.items()}
+                            for k in range(t))
+            progress[i] = SlotProgress(
+                request_id=res.request_id, phase="infer",
+                units_done=t, units_total=t, emitted=emitted)
+            finished[i] = res
             self.req[i] = None
-        return finished
+        return StepReport(finished=finished, progress=progress,
+                          cost={"units": t * len(occupied), "timesteps": t})

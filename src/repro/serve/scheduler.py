@@ -26,18 +26,45 @@ slots — to a `Scheduler`:
                                ``source`` option and ranks the queue by
                                distance to the resident batch's predicted
                                sparsity.
+* `SLOScheduler`             — deadline/priority admission plus per-step
+                               budget splitting, layered *over* an inner
+                               scheduler ('slo:sparsity' composes with the
+                               sparsity policy rather than replacing it).
+                               Learns the engine's measured cost per work
+                               unit from `StepReport`s, admits deadlined
+                               requests first (by priority class, then
+                               tightest deadline), boosts the prefill chunk
+                               of slots racing a deadline, and evicts
+                               residents that cannot make their deadline
+                               even under an optimistic estimate.
 
 Schedulers are deliberately workload-agnostic: they see only `Request`
-(payload opaque), the session-compatibility key function, and `Result.stats`.
-LM results carry no skip rates, so the sparsity scheduler degrades to FIFO
-for them — prediction falls back to the prior for every request and the
-ranking sort is stable.
+(payload opaque), the session-compatibility key function, and `Result.stats`
+/ `StepReport` costs. LM results carry no skip rates, so the sparsity
+scheduler degrades to FIFO for them — prediction falls back to the prior for
+every request and the ranking sort is stable.
+
+Beyond the required `Scheduler` protocol, `EngineCore` probes three
+*optional* hooks with ``getattr`` (so FIFO/sparsity need not implement
+them):
+
+* ``on_clock(now)``                                 — the engine clock at
+  the start of every step, before ``select`` (whose protocol signature
+  carries no clock);
+* ``plan_step(residents, progress, now, default)`` -> `StepBudget` — set
+  this step's work budget and its per-slot split;
+* ``on_report(report, seconds, now)``               — observe each step's
+  `StepReport` and measured wall seconds (cost-model learning);
+* ``expire(residents, progress, now)`` -> [request_id] — residents to evict
+  early because they can no longer meet their deadline.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Hashable, List, Optional, Protocol, Sequence, runtime_checkable
+import math
+from typing import (Callable, Dict, Hashable, List, Mapping, Optional,
+                    Protocol, Sequence, runtime_checkable)
 
-from .api import Request, Result
+from .api import Request, Result, SlotProgress, StepBudget, StepReport
 
 KeyFn = Callable[[Request], Hashable]
 
@@ -75,9 +102,12 @@ class Scheduler(Protocol):
       MUST return at least one request if the queue is non-empty, so the
       engine can always make progress.
     * ``on_admit`` is called for every selected request when it takes a
-      slot; ``observe`` when its `Result` completes. Between the two calls
-      the request is "resident" — the sparsity scheduler anchors admission
-      on the residents' predicted skip rates.
+      slot; ``observe`` when its `Result` is produced — normal completion,
+      cancellation, expiry, and also for requests retired straight from
+      the queue (which never saw ``on_admit``), so schedulers can drop any
+      queue-side state they hold. Between ``on_admit`` and ``observe`` the
+      request is "resident" — the sparsity scheduler anchors admission on
+      the residents' predicted skip rates.
     """
 
     def select(self, queue: Sequence[Request], free: int, *,
@@ -205,6 +235,9 @@ class SparsityAwareScheduler:
 
     def observe(self, request: Request, result: Result) -> None:
         self._resident.pop(request.request_id, None)
+        # a request can be retired straight from the queue (cancel/expiry)
+        # without ever being admitted: drop its pass-over counter too
+        self._passes.pop(request.request_id, None)
         skip = observed_skip_rate(result)
         if skip is None:
             return
@@ -214,17 +247,208 @@ class SparsityAwareScheduler:
             self._by_source[src] = self._ewma(self._by_source.get(src), skip)
 
 
+class SLOScheduler:
+    """Deadline/priority admission + per-step budget split over an inner policy.
+
+    Composes with, rather than replaces, the batch-composition schedulers:
+    requests carrying a ``deadline_s`` are admitted ahead of the rest,
+    ordered by priority class first (strict: a higher ``priority`` beats
+    any deadline below it), tightest deadline within a class; everything
+    else is delegated to the ``inner`` scheduler ('slo:sparsity' keeps the
+    sparsity co-batching for the non-deadlined stream).
+
+    The cost model is learned, not configured: every `StepReport` the engine
+    forwards through ``on_report`` updates the *fastest observed* seconds
+    per engine step. A minimum (not a mean) keeps every estimate built on
+    it a lower bound on real service — required for the never-evict-the-
+    feasible guarantee below — and makes the model immune to wall-clock
+    outliers like the XLA compile on a step's first launch width. On top
+    of it:
+
+    * ``plan_step`` sets the step's `StepBudget` split — a prefilling
+      resident racing its deadline gets its chunk boosted to
+      ``ceil(prefill_remaining / slack_steps)`` (capped at ``boost_cap``),
+      so a long prompt finishes prefill inside its SLO instead of at the
+      engine-wide default pace;
+    * ``expire`` evicts residents that cannot meet their deadline even
+      under an *optimistic* estimate (prefill at ``boost_cap`` per step,
+      one step per remaining decode token) — the estimate is a lower bound
+      on real service, so a request that could still finish is never
+      evicted;
+    * ``select`` defers queued deadlined requests that are already hopeless
+      by the same estimate (they expire in the queue instead of wasting a
+      slot), falling back to admitting the head when the engine would
+      otherwise sit idle.
+
+    Deadlines are in engine-clock seconds (`EngineCore`'s injectable clock;
+    wall time by default, steps in the deterministic benchmarks/tests).
+    """
+
+    #: default ceiling on the per-slot prefill chunk this scheduler will
+    #: grant; drivers that pre-compile launch widths key off it
+    DEFAULT_BOOST_CAP = 64
+
+    def __init__(self, inner: Optional[Scheduler] = None, *,
+                 boost_cap: int = DEFAULT_BOOST_CAP):
+        self.inner: Scheduler = inner if inner is not None else FIFOScheduler()
+        self.name = "slo" if inner is None else f"slo:{self.inner.name}"
+        self.boost_cap = max(1, boost_cap)
+        # fastest observed step: the optimistic (lower-bound) cost model
+        self._sec_per_step: Optional[float] = None
+        self._now = 0.0
+
+    def on_clock(self, now: float) -> None:
+        """Engine clock at the start of each step — keeps the hopeless-
+        deferral check in ``select`` (fixed protocol signature, no clock
+        argument) evaluating deadlines against the current time rather
+        than a timestamp from before an idle gap."""
+        self._now = now
+
+    # -- cost model ---------------------------------------------------------
+
+    def _optimistic_steps(self, prefill_rem: int, decode_rem: int) -> float:
+        """Lower bound on remaining engine steps: prefill at the maximum
+        chunk this scheduler would ever grant, one step per decode token —
+        minus one when both phases remain, because the step that consumes
+        the last prompt token also emits the first decode token."""
+        steps = math.ceil(prefill_rem / self.boost_cap) + decode_rem
+        if prefill_rem > 0 and decode_rem > 0:
+            steps -= 1
+        return steps
+
+    def _service_units(self, request: Request) -> "tuple[int, int]":
+        """(prefill, decode) units a queued request will need. Workload
+        heuristic: a token-sequence payload (LM) prefills its length; the
+        decode budget is the ``max_new_tokens`` option. Anything else
+        (e.g. an SNN image array, which completes in one fused step)
+        estimates 0 — the estimate must stay a *lower bound* on real
+        service, so an unknown payload shape never defers/evicts a request
+        that could still finish."""
+        payload = request.payload
+        prefill = len(payload) if isinstance(payload, (list, tuple)) else 0
+        return prefill, int(request.options.get("max_new_tokens", 0))
+
+    def _hopeless(self, request: Request, now: float) -> bool:
+        if self._sec_per_step is None or request.deadline_at is None:
+            return False
+        prefill, decode = self._service_units(request)
+        est = self._optimistic_steps(prefill, decode) * self._sec_per_step
+        return now + est > request.deadline_at
+
+    # -- Scheduler protocol -------------------------------------------------
+
+    def select(self, queue: Sequence[Request], free: int, *,
+               key_fn: KeyFn, active_key: Optional[Hashable]) -> List[Request]:
+        if not queue or free <= 0:
+            return []
+        deadlined = sorted(
+            (r for r in queue if r.deadline_s is not None),
+            key=lambda r: (-r.priority, r.deadline_at, r.arrival_s))
+        key = active_key
+        if key is None and deadlined:
+            key = key_fn(deadlined[0])
+        if key is None:                       # no deadlines anywhere: pure inner
+            return self.inner.select(queue, free, key_fn=key_fn,
+                                     active_key=None)
+        urgent = [r for r in deadlined if key_fn(r) == key]
+        picks = [r for r in urgent
+                 if not self._hopeless(r, self._now)][:free]
+        if len(picks) < free:
+            rest = [r for r in queue if r.deadline_s is None]
+            picks = picks + self.inner.select(
+                rest, free - len(picks), key_fn=key_fn, active_key=key)
+        if not picks and active_key is None:
+            # contract: an idle engine with a non-empty queue must make
+            # progress — admit the head even if it is predicted to miss
+            # (the engine will expire it with a partial result)
+            picks = [r for r in queue if key_fn(r) == key][:1]
+        return picks
+
+    def on_admit(self, request: Request) -> None:
+        self.inner.on_admit(request)
+
+    def observe(self, request: Request, result: Result) -> None:
+        self.inner.observe(request, result)
+
+    # -- optional EngineCore hooks ------------------------------------------
+
+    def plan_step(self, residents: Mapping[int, Request],
+                  progress: Mapping[int, SlotProgress], *,
+                  now: float, default: StepBudget) -> StepBudget:
+        self._now = now
+        if self._sec_per_step is None:
+            return default
+        per = dict(default.per_slot or {})
+        for slot, req in residents.items():
+            prog = progress.get(slot)
+            if req.deadline_at is None or prog is None or prog.phase != "prefill":
+                continue
+            decode = int(req.options.get("max_new_tokens", 0))
+            prefill_rem = max(0, prog.units_total - decode - prog.units_done)
+            slack_steps = (req.deadline_at - now) / self._sec_per_step - decode
+            if slack_steps <= 0:
+                chunk = self.boost_cap      # racing an already-tight deadline
+            else:
+                chunk = math.ceil(prefill_rem / max(1.0, slack_steps))
+            if chunk > default.for_slot(slot):
+                per[slot] = min(self.boost_cap, chunk)
+        if per == (default.per_slot or {}):
+            return default
+        return StepBudget(units=default.units, chunk=default.chunk,
+                          per_slot=per)
+
+    def on_report(self, report: StepReport, *, seconds: float,
+                  now: float) -> None:
+        self._now = now
+        if seconds > 0:
+            old = self._sec_per_step
+            self._sec_per_step = seconds if old is None else min(old, seconds)
+
+    def expire(self, residents: Mapping[int, Request],
+               progress: Mapping[int, SlotProgress], *,
+               now: float) -> List[int]:
+        self._now = now
+        out: List[int] = []
+        if self._sec_per_step is None:
+            return out
+        for slot, req in residents.items():
+            prog = progress.get(slot)
+            if req.deadline_at is None or prog is None:
+                continue
+            decode = int(req.options.get("max_new_tokens", 0))
+            if prog.phase == "prefill":
+                prefill_rem = max(0, prog.units_total - decode - prog.units_done)
+                decode_rem = decode
+            else:
+                prefill_rem = 0
+                decode_rem = max(0, prog.units_total - prog.units_done)
+            est = self._optimistic_steps(prefill_rem, decode_rem) * self._sec_per_step
+            if now + est > req.deadline_at:
+                out.append(req.request_id)
+        return out
+
+
 SCHEDULERS = {
     "fifo": FIFOScheduler,
     "sparsity": SparsityAwareScheduler,
+    "slo": SLOScheduler,
 }
 
 
 def make_scheduler(name: str, **kwargs) -> Scheduler:
-    """Build a scheduler by `EngineConfig.scheduler` name ('fifo'|'sparsity')."""
+    """Build a scheduler by `EngineConfig.scheduler` name.
+
+    'fifo' | 'sparsity' | 'slo' — and the composed form 'slo:<inner>'
+    (e.g. 'slo:sparsity'), which wraps the inner policy in an
+    `SLOScheduler`; kwargs go to the outer scheduler in that case.
+    """
+    if name.startswith("slo:"):
+        inner = make_scheduler(name.split(":", 1)[1])
+        return SLOScheduler(inner, **kwargs)
     try:
         cls = SCHEDULERS[name]
     except KeyError:
         raise ValueError(
-            f"unknown scheduler {name!r}; choose from {sorted(SCHEDULERS)}")
+            f"unknown scheduler {name!r}; choose from "
+            f"{sorted(SCHEDULERS) + ['slo:<inner>']}")
     return cls(**kwargs)

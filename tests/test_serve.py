@@ -1,11 +1,21 @@
-"""Serving engine: batched greedy generation + int4-weight numerics."""
+"""Serving engine: batched greedy generation + int4-weight numerics.
+
+Ported off the seed-era `ServeEngine` shim onto `EngineCore` + `LMRunner`
+directly; the shim survives one release as a `DeprecationWarning` alias
+(asserted at the bottom).
+"""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tf
-from repro.serve.engine import ServeEngine
+from repro.serve.api import EngineConfig
+from repro.serve.core import EngineCore
+from repro.serve.runners.lm import LMRunner
 
 CFG = ArchConfig(name="t-serve", family="dense", n_layers=2, d_model=32,
                  n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=61,
@@ -16,12 +26,18 @@ def _params():
     return tf.init_params(jax.random.PRNGKey(0), CFG)
 
 
+def _generate(runner, prompts, num_tokens, slots=4):
+    core = EngineCore(runner, EngineConfig(slots=slots))
+    ids = [core.submit(p, max_new_tokens=num_tokens) for p in prompts]
+    results = core.run_until_complete()
+    return [results[i].outputs for i in ids]
+
+
 def test_generate_shapes_and_determinism():
-    params = _params()
-    engine = ServeEngine(CFG, params, batch_slots=4, max_seq=32)
+    runner = LMRunner(CFG, _params(), max_seq=32)
     prompts = [[1, 2, 3], [5], [9, 9], [4]]
-    out1 = engine.generate(prompts, 6)
-    out2 = engine.generate(prompts, 6)
+    out1 = _generate(runner, prompts, 6)
+    out2 = _generate(runner, prompts, 6)
     assert out1 == out2  # greedy decode is deterministic
     for p, o in zip(prompts, out1):
         assert len(o) == len(p) + 6
@@ -31,9 +47,9 @@ def test_generate_shapes_and_determinism():
 def test_generate_matches_manual_decode():
     """Engine output == manual decode_step loop (same greedy choices)."""
     params = _params()
-    engine = ServeEngine(CFG, params, batch_slots=1, max_seq=32)
+    runner = LMRunner(CFG, params, max_seq=32)
     prompt = [3, 7, 1]
-    out = engine.generate([prompt], 4)[0]
+    out = _generate(runner, [prompt], 4, slots=1)[0]
 
     cache = tf.init_cache(CFG, 1, 32)
     toks = jnp.asarray([prompt], jnp.int32)
@@ -57,25 +73,35 @@ def test_ragged_prompts_match_solo_decode():
     """Regression: shorter prompts in a ragged batch must decode exactly as
     if served alone. The seed engine teacher-forced them on pad zeros up to
     the batch max prompt length, corrupting their decode state."""
-    params = _params()
-    engine = ServeEngine(CFG, params, batch_slots=4, max_seq=32)
+    runner = LMRunner(CFG, _params(), max_seq=32)
     prompts = [[1, 2, 3, 4, 5], [7], [9, 9], [3, 1]]   # unequal lengths
-    batched = engine.generate(prompts, 6)
+    batched = _generate(runner, prompts, 6)
     for p, got in zip(prompts, batched):
-        solo = ServeEngine(CFG, params, batch_slots=4, max_seq=32).generate([p], 6)[0]
+        solo = _generate(runner, [p], 6)[0]
         assert got == solo, (p, got, solo)
 
 
 def test_int4_serving_quantizes_weights():
     params = _params()
-    e16 = ServeEngine(CFG, params, batch_slots=1, max_seq=16)
-    e4 = ServeEngine(CFG, params, batch_slots=1, max_seq=16, quant_bits=4)
-    w16 = np.asarray(jax.tree.leaves(e16.params)[0])
+    r16 = LMRunner(CFG, params, max_seq=16)
+    r4 = LMRunner(CFG, params, max_seq=16, quant_bits=4)
     # int4 view has coarse weights somewhere in the tree
     quantized_any = False
-    for a, b in zip(jax.tree.leaves(e16.params), jax.tree.leaves(e4.params)):
+    for a, b in zip(jax.tree.leaves(r16.params), jax.tree.leaves(r4.params)):
         if a.ndim >= 2 and not np.array_equal(np.asarray(a), np.asarray(b)):
             quantized_any = True
     assert quantized_any
-    out = e4.generate([[1, 2]], 3)[0]
+    out = _generate(r4, [[1, 2]], 3, slots=1)[0]
     assert len(out) == 5
+
+
+def test_serve_engine_alias_warns_and_works():
+    """The retired shim: one release of DeprecationWarning, same outputs as
+    the EngineCore + LMRunner it delegates to."""
+    from repro.serve.engine import ServeEngine
+    params = _params()
+    with pytest.warns(DeprecationWarning, match="ServeEngine is deprecated"):
+        engine = ServeEngine(CFG, params, batch_slots=2, max_seq=32)
+    out = engine.generate([[1, 2, 3], [5]], 4)
+    runner = LMRunner(CFG, params, max_seq=32)
+    assert out == _generate(runner, [[1, 2, 3], [5]], 4, slots=2)

@@ -1,0 +1,304 @@
+"""Budgeted session API: chunked prefill, streaming, deadlines, SLO admission.
+
+Coverage for the `StepBudget`/`StepReport` session contract and the
+lifecycle built on it:
+
+* chunked prefill is bit-identical to solo prefill for chunk sizes
+  {1, 7, exact-length, > length} — chunking regroups the same masked
+  per-token launches, so it must never change a logit;
+* cancellation mid-prefill reclaims the slot without perturbing neighbours
+  (bit-identity vs a trace that never contained the request) and the slot
+  serves its next occupant exactly like a fresh one;
+* deadline expiry surfaces ``Result.status == 'expired'`` for queued and
+  resident requests, on a deterministic step-counting engine clock;
+* `poll_partial` streams LM tokens incrementally and per-timestep SNN
+  sparsity stats;
+* the `SLOScheduler` orders admission by deadline/priority, splits the
+  step budget toward slots racing a deadline, and composes over the
+  sparsity scheduler via ``make_scheduler('slo:sparsity')``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import vgg9_snn
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.vgg9 import init_vgg9
+from repro.serve.api import (EngineConfig, Request, SlotProgress, StepBudget,
+                             StepReport)
+from repro.serve.core import EngineCore, StepClock
+from repro.serve.runners.lm import LMRunner
+from repro.serve.runners.snn import SNNRunner
+from repro.serve.scheduler import (SLOScheduler, SparsityAwareScheduler,
+                                   make_scheduler)
+
+LM_CFG = ArchConfig(name="t-budget", family="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=61,
+                    dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+SNN_CFG = vgg9_snn.TINY
+
+
+@pytest.fixture(scope="module")
+def lm_runner():
+    params = tf.init_params(jax.random.PRNGKey(0), LM_CFG)
+    return LMRunner(LM_CFG, params, max_seq=64)
+
+
+def _solo(runner, prompt, tokens):
+    return runner.run([Request(0, prompt, {"max_new_tokens": tokens})])[0].outputs
+
+
+def _step_core(runner, **cfg):
+    """Engine on the deterministic step-counting clock (`StepClock`)."""
+    clock = StepClock()
+    core = EngineCore(runner, EngineConfig(**cfg), clock=clock)
+    clock.attach(core)
+    return core
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_bit_identical_all_chunk_sizes(lm_runner):
+    """{1, 7, exact-length, > length} x {mid-stream join}: every chunk size
+    must reproduce the solo tokens exactly, while a resident decodes."""
+    prompt = [int(t) for t in
+              np.random.default_rng(0).integers(1, LM_CFG.vocab, size=13)]
+    solo = _solo(lm_runner, prompt, 5)
+    resident_solo = _solo(lm_runner, [4, 2], 9)
+    for chunk in (1, 7, len(prompt), len(prompt) + 8):
+        core = EngineCore(lm_runner,
+                          EngineConfig(slots=2, prefill_chunk=chunk))
+        a = core.submit([4, 2], max_new_tokens=9)
+        core.step()
+        core.step()                    # a is mid-decode when b joins
+        b = core.submit(prompt, max_new_tokens=5)
+        results = core.run_until_complete()
+        assert results[b].outputs == solo, chunk
+        assert results[a].outputs == resident_solo, chunk
+        # one chunk per ceil(prompt/chunk) prefill steps, ttft matches
+        expect_chunks = -(-len(prompt) // chunk)
+        assert results[b].stats["prefill_chunks"] == expect_chunks
+        assert results[b].stats["ttft_steps"] == expect_chunks
+
+
+def test_chunked_prefill_reduces_steps_and_raises_goodput(lm_runner):
+    stats = {}
+    for chunk in (1, 8):
+        core = EngineCore(lm_runner, EngineConfig(slots=2, prefill_chunk=chunk))
+        a = core.submit([1, 2], max_new_tokens=12)
+        core.step()
+        b = core.submit(list(range(1, 25)), max_new_tokens=3)
+        core.run_until_complete()
+        stats[chunk] = core.stats()
+    assert stats[8]["steps_run"] < stats[1]["steps_run"]
+    assert (stats[8]["goodput_decode_tok_per_step"]
+            > stats[1]["goodput_decode_tok_per_step"])
+    # same decode work in both runs
+    assert stats[8]["decode_tokens"] == stats[1]["decode_tokens"]
+
+
+def test_padded_len_equals_prompt_len_under_continuous(lm_runner):
+    core = EngineCore(lm_runner, EngineConfig(slots=2, prefill_chunk=4))
+    rid = core.submit([9, 9, 4], max_new_tokens=2)
+    res = core.run_until_complete()[rid]
+    assert res.stats["padded_len"] == res.stats["prompt_len"] == 3
+
+
+def test_step_budget_units_cap_trims_prefill_extras():
+    """A total-units cap trims prefill allowances (never below one token
+    per occupied slot), so the scheduler can bound per-step latency."""
+    budget = StepBudget(units=5, chunk=4)
+    assert budget.for_slot(0) == 4
+    boosted = StepBudget(chunk=2, per_slot={1: 6})
+    assert boosted.for_slot(0) == 2 and boosted.for_slot(1) == 6
+
+
+def test_lm_session_honors_units_cap(lm_runner):
+    session = lm_runner.open_session(2)
+    session.admit(0, Request(0, list(range(1, 20)), {"max_new_tokens": 2}))
+    session.admit(1, Request(1, list(range(1, 20)), {"max_new_tokens": 2}))
+    report = session.step(StepBudget(units=6, chunk=8))
+    assert report.cost["units"] == 6          # 8 + 8 trimmed to the cap
+    report = session.step(StepBudget(units=1, chunk=8))
+    assert report.cost["units"] == 2          # floor: one token per slot
+
+
+# ---------------------------------------------------------------------------
+# Cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_prefill_reclaims_slot_without_perturbing(lm_runner):
+    """Cancel a joiner mid-prefill: the resident's tokens must be identical
+    to a trace that never contained the cancelled request, and the freed
+    slot must serve its next occupant exactly like a solo run."""
+    reference = EngineCore(lm_runner, EngineConfig(slots=2, prefill_chunk=4))
+    ra = reference.submit([4, 2], max_new_tokens=10)
+    ref_out = reference.run_until_complete()[ra].outputs
+
+    core = EngineCore(lm_runner, EngineConfig(slots=2, prefill_chunk=4))
+    a = core.submit([4, 2], max_new_tokens=10)
+    core.step()
+    b = core.submit(list(range(1, 30)), max_new_tokens=4)
+    core.step()                                # b mid-prefill (chunk 4 of 29)
+    assert core.in_flight() == 2
+    assert core.cancel(b)
+    res_b = core.poll(b)
+    assert res_b.status == "cancelled"
+    assert res_b.stats["prefill_chunks"] >= 1  # partial progress surfaced
+    c = core.submit([7, 7, 7], max_new_tokens=4)   # reuses b's slot
+    results = core.run_until_complete()
+    assert results[a].outputs == ref_out
+    assert results[c].outputs == _solo(lm_runner, [7, 7, 7], 4)
+
+
+def test_cancel_queued_and_unknown(lm_runner):
+    core = EngineCore(lm_runner, EngineConfig(slots=1))
+    a = core.submit([1], max_new_tokens=2)
+    b = core.submit([2], max_new_tokens=2)     # still queued
+    assert core.cancel(b)
+    assert core.poll(b).status == "cancelled"
+    assert not core.cancel(12345)
+    results = core.run_until_complete()
+    assert results[a].status == "ok"
+    assert core.stats()["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_expiry_queued_and_resident(lm_runner):
+    core = _step_core(lm_runner, slots=1)
+    # resident: budget far beyond its deadline -> expires mid-decode with
+    # partial outputs
+    x = core.submit([1, 2, 3], max_new_tokens=30, deadline_s=6)
+    # queued: never gets the slot before its deadline
+    y = core.submit([5], max_new_tokens=2, deadline_s=3)
+    results = core.run_until_complete()
+    assert results[x].status == "expired"
+    assert results[y].status == "expired"
+    assert 3 < len(results[x].outputs) < 33    # partial decode surfaced
+    assert results[y].outputs is None
+    assert core.stats()["expired"] == 2
+
+
+def test_no_deadline_means_no_expiry(lm_runner):
+    core = _step_core(lm_runner, slots=1)
+    rid = core.submit([1, 2], max_new_tokens=4)
+    assert core.run_until_complete()[rid].status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Streaming partials
+# ---------------------------------------------------------------------------
+
+def test_poll_partial_streams_lm_tokens(lm_runner):
+    core = EngineCore(lm_runner, EngineConfig(slots=1, prefill_chunk=2))
+    rid = core.submit([3, 1, 4, 1], max_new_tokens=5)
+    streamed = []
+    while core.in_flight() or core.pending():
+        core.step()
+        streamed.extend(core.poll_partial(rid))
+    final = core.poll(rid)
+    assert final.outputs == [3, 1, 4, 1] + streamed
+    assert core.poll_partial(rid) == []        # drained with the result
+
+
+def test_poll_partial_streams_snn_timestep_stats():
+    params = init_vgg9(jax.random.PRNGKey(0), SNN_CFG)
+    runner = SNNRunner(SNN_CFG, params)
+    core = EngineCore(runner, EngineConfig(slots=2))
+    img = jax.random.uniform(jax.random.PRNGKey(2),
+                             (SNN_CFG.img_hw, SNN_CFG.img_hw, 3))
+    rid = core.submit(img)
+    core.step()
+    parts = core.poll_partial(rid)
+    assert len(parts) == SNN_CFG.timesteps     # one entry per timestep
+    for entry in parts:
+        assert entry and all(0.0 <= v <= 1.0 for v in entry.values())
+    res = core.poll(rid)
+    # the streamed trace is the per-request ts_occupancy stat, timestep-major
+    for layer, vals in res.stats["ts_occupancy"].items():
+        assert [p[layer] for p in parts] == vals
+
+
+# ---------------------------------------------------------------------------
+# SLO scheduler
+# ---------------------------------------------------------------------------
+
+def _req(rid, payload=(), deadline_s=None, priority=0, arrival_s=0.0, **opts):
+    return Request(rid, list(payload), opts, deadline_s=deadline_s,
+                   priority=priority, arrival_s=arrival_s)
+
+
+def test_slo_select_orders_by_priority_then_deadline():
+    sched = SLOScheduler()
+    key_fn = lambda r: "k"
+    queue = [_req(0, max_new_tokens=4),
+             _req(1, deadline_s=50.0, max_new_tokens=4),
+             _req(2, deadline_s=10.0, max_new_tokens=4),
+             _req(3, deadline_s=90.0, priority=5, max_new_tokens=4)]
+    picks = sched.select(queue, 3, key_fn=key_fn, active_key=None)
+    # priority 5 first, then tightest deadline, then the next deadline
+    assert [r.request_id for r in picks] == [3, 2, 1]
+    # remaining slots go to the inner (FIFO) scheduler's picks
+    picks = sched.select(queue, 4, key_fn=key_fn, active_key=None)
+    assert [r.request_id for r in picks] == [3, 2, 1, 0]
+
+
+def test_slo_scheduler_meets_deadline_fifo_misses(lm_runner):
+    """Two bulk requests ahead of an interactive one with a tight deadline:
+    FIFO expires it in the queue; the SLO scheduler admits it first."""
+    outcomes = {}
+    for scheduler in ("fifo", "slo"):
+        core = _step_core(lm_runner, slots=1, scheduler=scheduler)
+        bulk = [core.submit([9, 9], max_new_tokens=12) for _ in range(2)]
+        inter = core.submit([5], max_new_tokens=2, deadline_s=6.0, priority=1)
+        results = core.run_until_complete()
+        outcomes[scheduler] = results[inter].status
+        assert all(results[b].status == "ok" for b in bulk)
+    assert outcomes == {"fifo": "expired", "slo": "ok"}
+
+
+def test_slo_plan_step_boosts_prefill_chunk_toward_deadline():
+    sched = SLOScheduler(boost_cap=32)
+    sched.on_report(StepReport(), seconds=1.0, now=1.0)    # learn 1 s/step
+    residents = {0: _req(0, payload=[0] * 40, deadline_s=12.0,
+                         max_new_tokens=4)}
+    progress = {0: SlotProgress(0, "prefill", units_done=0, units_total=44)}
+    budget = sched.plan_step(residents, progress, now=2.0,
+                             default=StepBudget(chunk=1))
+    # 40 prefill tokens, ~6 step slack after decode: chunk must be boosted
+    assert budget.for_slot(0) >= 6
+    # decode-phase residents keep the default
+    progress = {0: SlotProgress(0, "decode", units_done=42, units_total=44)}
+    budget = sched.plan_step(residents, progress, now=2.0,
+                             default=StepBudget(chunk=1))
+    assert budget.for_slot(0) == 1
+
+
+def test_slo_expire_evicts_only_provably_late():
+    sched = SLOScheduler(boost_cap=8)
+    sched.on_report(StepReport(), seconds=1.0, now=1.0)
+    residents = {0: _req(0, payload=[0] * 8, deadline_s=100.0,
+                         max_new_tokens=4),
+                 1: _req(1, payload=[0] * 8, deadline_s=3.0,
+                         max_new_tokens=40)}
+    progress = {
+        0: SlotProgress(0, "prefill", units_done=0, units_total=12),
+        1: SlotProgress(1, "prefill", units_done=0, units_total=48),
+    }
+    # slot 0 has plenty of slack; slot 1 needs >= 41 steps for 3 s of slack
+    assert sched.expire(residents, progress, now=2.0) == [1]
+
+
+def test_make_scheduler_composes_slo_over_sparsity():
+    sched = make_scheduler("slo:sparsity")
+    assert isinstance(sched, SLOScheduler)
+    assert isinstance(sched.inner, SparsityAwareScheduler)
+    assert sched.name == "slo:sparsity"
+    with pytest.raises(ValueError):
+        make_scheduler("slo:nope")

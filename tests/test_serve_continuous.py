@@ -22,7 +22,8 @@ from repro.configs import vgg9_snn
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tf
 from repro.models.vgg9 import init_vgg9
-from repro.serve.api import EngineConfig, PAD_REQUEST_ID, Request, Result
+from repro.serve.api import (EngineConfig, PAD_REQUEST_ID, Request, Result,
+                             SlotProgress, StepBudget, StepReport)
 from repro.serve.core import EngineCore
 from repro.serve.runners.lm import LMRunner
 from repro.serve.runners.snn import SNNRunner
@@ -58,16 +59,28 @@ class StubSession:
         self.left[slot] = steps
         return None
 
-    def step(self):
+    def cancel(self, slot):
+        req = self.req[slot]
+        self.req[slot] = None
+        return Result(req.request_id, None, stats={}, status="cancelled")
+
+    def step(self, budget=StepBudget()):
         finished = {}
+        progress = {}
         for i, r in enumerate(self.req):
             if r is None:
                 continue
             self.left[i] -= 1
+            total = r.payload.get("steps", 1)
+            progress[i] = SlotProgress(r.request_id, "decode",
+                                       total - self.left[i], total,
+                                       emitted=(total - self.left[i],))
             if self.left[i] <= 0:
                 finished[i] = _stub_result(r)
                 self.req[i] = None
-        return finished
+        return StepReport(finished=finished, progress=progress,
+                          cost={"units": len(progress),
+                                "decode_tokens": len(progress)})
 
 
 class StubRunner:
