@@ -1,6 +1,8 @@
-"""Unified serving engine benchmark: admission, schedulers, budgets, SLOs.
+"""Unified serving engine benchmark: admission, schedulers, budgets, SLOs,
+and goodput under injected faults.
 
-Four experiments through one `EngineCore`:
+Five experiments — four through one `EngineCore`, the fifth through the
+supervised multi-replica `Router`:
 
 * LM — ragged greedy generation with *mixed decode budgets*: run-to-completion
   bucketed batching (``admission='batch'``, the PR-2 policy) vs step-level
@@ -27,6 +29,12 @@ Four experiments through one `EngineCore`:
   step-counting engine clock: FIFO misses the interactive class's deadline
   (requests expire behind bulk residents), the `SLOScheduler` meets it by
   admitting tightest-deadline-first.
+* Faults — chaos scenarios through a 3-replica router fleet: a wedged
+  replica is condemned by the heartbeat and its in-flight request replays
+  bit-identically on a healthy replica (recovery latency in router steps);
+  a NaN-poisoned request retires ``'failed'`` with clean partials intact;
+  a queue flood sheds overflow as ``'rejected'`` while high-priority work
+  completes. Reports goodput under failure vs a fault-free fleet.
 
 Both schedulers must return bit-identical outputs per request (asserted);
 only composition, latency and energy attribution may differ.
@@ -372,13 +380,137 @@ def bench_slo(smoke: bool) -> dict:
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Faults: goodput + recovery latency under injected failures (serve.router)
+# ---------------------------------------------------------------------------
+
+def bench_faults(smoke: bool) -> dict:
+    """Chaos scenarios through the supervised 3-replica router.
+
+    Scenario 1 (wedge + NaN, the ISSUE-6 acceptance shape): replica 0
+    wedges mid-stream, replica 1 NaN-poisons a slot. Every in-flight
+    request reaches a terminal result; the wedged replica's request is
+    re-routed by deterministic replay and asserted *bit-identical* to a
+    fault-free single-replica run; the poisoned request retires
+    ``'failed'`` with its clean partial tokens intact. Reported metrics:
+    recovery latency (router steps from the drain to the replayed
+    request's completion) and goodput under failure (ok results per
+    router step, vs the fault-free fleet).
+
+    Scenario 2 (overload shedding): a single small-queue replica is
+    flooded with low-priority work behind a high-priority batch; the high
+    class completes, overflow is shed with ``status='rejected'``, and
+    every submission still gets exactly one terminal result.
+    """
+    from repro.serve.core import all_finite
+    from repro.serve.faults import flood_queue, parse_fleet_plan
+    from repro.serve.router import make_router
+
+    cfg = _lm_cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = 6 if smoke else 10
+    runner = LMRunner(cfg, params, max_seq=64)
+    rng = np.random.default_rng(3)
+    prompts = [list(int(t) for t in rng.integers(1, cfg.vocab, size=n))
+               for n in (4, 3, 2)]
+
+    # fault-free references: single replica for bit-identity, and a clean
+    # 3-replica fleet for the goodput-under-failure comparison
+    ref_core = EngineCore(runner, EngineConfig(slots=2), clock=StepClock())
+    ref_ids = [ref_core.submit(p, max_new_tokens=tokens) for p in prompts]
+    ref = ref_core.run_until_complete()
+    clean = make_router(runner, 3, EngineConfig(slots=2))
+    for i, p in enumerate(prompts):
+        clean.submit(p, max_new_tokens=tokens, affinity=f"s{i}")
+    clean.run_until_complete()
+    clean_goodput = (clean.stats()["ok"] / clean.stats()["router_steps"])
+
+    plans = parse_fleet_plan("0=wedge@4,1=nan@4:slot=0")
+    router = make_router(runner, 3, EngineConfig(slots=2), plans=plans,
+                         wedge_patience=3)
+    rids = [router.submit(p, max_new_tokens=tokens, affinity=f"s{i}")
+            for i, p in enumerate(prompts)]
+    a, b, c = rids
+    streams = {rid: [] for rid in rids}
+    for _ in range(400):
+        router.step()
+        for rid in rids:
+            streams[rid].extend(router.poll_partial(rid))
+        if not router._outstanding:
+            break
+    results = {rid: router.poll(rid) for rid in rids}
+    stats = router.stats()
+
+    # every in-flight request completed; re-route is bit-identical
+    assert all(res is not None for res in results.values())
+    assert results[a].status == "ok" and results[c].status == "ok"
+    bit_identical = (results[a].outputs == ref[ref_ids[0]].outputs
+                     and results[c].outputs == ref[ref_ids[2]].outputs)
+    assert bit_identical, "replayed outputs diverged from fault-free run"
+    # poisoned request: failed, clean partial prefix intact
+    assert results[b].status == "failed"
+    ref_b = ref[ref_ids[1]].outputs[len(prompts[1]):]
+    partials_intact = (len(streams[b]) > 0 and all_finite(streams[b])
+                      and streams[b] == ref_b[:len(streams[b])])
+    assert partials_intact, "poisoned request lost its clean partials"
+
+    wedge_drain = next(e for e in router.drain_log if e[1] == 0)
+    recovery_steps = max((router.completed_at[rid] for rid in wedge_drain[3]),
+                         default=wedge_drain[0]) - wedge_drain[0]
+    wedge_reroute = {
+        "reroutes": stats["rerouted"],
+        "recovery_steps": recovery_steps,
+        "bit_identical": bit_identical,
+        "router_steps": stats["router_steps"],
+        "goodput_ok_per_step": round(stats["ok"] / stats["router_steps"], 4),
+        "goodput_fault_free_per_step": round(clean_goodput, 4),
+        "replica_states": [r["state"] for r in stats["replicas"]],
+    }
+    nan_poison = {
+        "failed": stats["failed"],
+        "partials_intact": partials_intact,
+        "clean_partial_tokens": len(streams[b]),
+    }
+
+    # scenario 2: queue flood against one small replica
+    shed_router = make_router(runner, 1,
+                              EngineConfig(slots=2, max_queue=2),
+                              max_waiting=2)
+    high = [shed_router.submit(p, max_new_tokens=2, priority=5)
+            for p in prompts]
+    low = flood_queue(shed_router, prompts[0], count=8, max_new_tokens=2)
+    shed_results = shed_router.run_until_complete()
+    assert all(shed_results[r].status == "ok" for r in high)
+    n_rejected = sum(shed_results[r].status == "rejected" for r in low)
+    assert n_rejected > 0, "flood never triggered shedding"
+    assert len(shed_results) == len(high) + len(low)    # exactly-once results
+    overload = {
+        "submitted": len(high) + len(low),
+        "ok": sum(r.status == "ok" for r in shed_results.values()),
+        "rejected": n_rejected,
+        "high_priority_ok": len(high),
+    }
+
+    rec = {"name": "serve_engine_faults", "replicas": 3,
+           "wedge_reroute": wedge_reroute, "nan_poison": nan_poison,
+           "overload": overload}
+    emit("serve_engine_faults", 0.0,
+         f"recovery={recovery_steps} steps, goodput "
+         f"{wedge_reroute['goodput_ok_per_step']} vs clean "
+         f"{wedge_reroute['goodput_fault_free_per_step']} ok/step, "
+         f"rejected={n_rejected}",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
 def run(smoke: bool = False) -> dict:
     lm = bench_lm(smoke)
     snn = bench_snn(smoke)
     chunked = bench_chunked_prefill(smoke)
     slo = bench_slo(smoke)
+    faults = bench_faults(smoke)
     record = {"name": "serve_engine", "lm": lm, "snn": snn,
-              "chunked_prefill": chunked, "slo": slo}
+              "chunked_prefill": chunked, "slo": slo, "faults": faults}
     print("SERVE_ENGINE_JSON " + json.dumps(record, sort_keys=True))
     append_result(record)
     return record

@@ -11,6 +11,11 @@
     # data-mesh sharded SNN serving (slot batch split over 2 devices):
     XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
         PYTHONPATH=src python -m repro.launch.serve --workload snn --data-shard 2
+
+    # fault-tolerant fleet: 3 replicas behind the supervised router, with
+    # an injected wedge on replica 0 and a NaN-poison on replica 1:
+    PYTHONPATH=src python -m repro.launch.serve --workload lm --replicas 3 \\
+        --fault-plan '0=wedge@4,1=nan@6:slot=0'
 """
 from __future__ import annotations
 
@@ -34,6 +39,29 @@ def engine_config(args) -> EngineConfig:
                         prefill_chunk=args.prefill_chunk)
 
 
+def build_engine(runner, args):
+    """One `EngineCore`, or a supervised `Router` fleet when --replicas > 1.
+
+    Any --fault-plan also routes through the fleet path so a single replica
+    can be chaos-tested; the router runs on a shared deterministic tick
+    clock, which is why --slo-ms (wall clock) is rejected alongside it.
+    """
+    if args.replicas > 1 or args.fault_plan:
+        from ..serve.faults import parse_fleet_plan
+        from ..serve.router import make_router
+        plans = parse_fleet_plan(args.fault_plan) if args.fault_plan else None
+        return make_router(runner, max(1, args.replicas),
+                           engine_config(args), plans=plans)
+    return EngineCore(runner, engine_config(args))
+
+
+def print_fleet_report(core) -> None:
+    print(f"engine: {core.stats()}")
+    for step, idx, condition, rerouted in getattr(core, "drain_log", []):
+        print(f"drain @step {step}: replica {idx} condemned ({condition}), "
+              f"re-routed requests {rerouted}")
+
+
 def serve_lm(args) -> None:
     from ..serve.runners.lm import LMRunner
 
@@ -42,7 +70,7 @@ def serve_lm(args) -> None:
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
     runner = LMRunner(cfg, params, max_seq=args.seq,
                       quant_bits=4 if args.int4 else 0)
-    core = EngineCore(runner, engine_config(args))
+    core = build_engine(runner, args)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = []
@@ -85,7 +113,7 @@ def serve_lm(args) -> None:
         new = res.outputs[len(prompts[i]):] if res.outputs is not None else None
         print(f"req{rid}: prompt={prompts[i]} -> {new} "
               f"status={res.status} stats={dict(res.stats)}")
-    print(f"engine: {core.stats()}")
+    print_fleet_report(core)
 
 
 def serve_snn(args) -> None:
@@ -100,7 +128,7 @@ def serve_snn(args) -> None:
         cfg = dataclasses.replace(cfg, img_hw=args.img_hw)
     params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
     runner = SNNRunner(cfg, params, interpret=True)
-    core = EngineCore(runner, engine_config(args))
+    core = build_engine(runner, args)
 
     if args.data_shard > 1:
         n_dev = len(jax.devices())
@@ -134,8 +162,9 @@ def serve_snn(args) -> None:
         print(f"req{rid}: class={pred} spikes={res.stats['spike_total']:.0f} "
               f"skip={skip} energy={res.stats['energy_j']:.3e} J "
               f"served={res.stats['served_energy_j']:.3e} J")
-    print(f"engine: {core.stats()}")
-    print(f"admissions: {core.admission_log}")
+    print_fleet_report(core)
+    if hasattr(core, "admission_log"):          # single engine, not a fleet
+        print(f"admissions: {core.admission_log}")
 
 
 def main():
@@ -170,6 +199,16 @@ def main():
                     help="LM: per-request latency SLO in milliseconds "
                          "(wall clock); expired requests surface "
                          "status='expired'. Pair with --scheduler slo")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a supervised router over N engine "
+                         "replicas (heartbeat + numerics probe; wedged or "
+                         "poisoned replicas drain, in-flight requests "
+                         "re-route by deterministic replay)")
+    ap.add_argument("--fault-plan", default="",
+                    help="fault-injection schedule per replica, e.g. "
+                         "'0=wedge@4,1=nan@6:slot=0' (kinds: wedge, slow, "
+                         "raise, nan, flood). Implies the router path even "
+                         "with --replicas 1")
     ap.add_argument("--mixed-trace", action="store_true",
                     help="SNN: alternate near-silent and dense requests")
     ap.add_argument("--data-shard", type=int, default=0,
@@ -180,6 +219,12 @@ def main():
     if args.slo_ms > 0 and args.admission == "batch":
         ap.error("--slo-ms requires --admission continuous "
                  "(deadlines are step-level; the batch path ignores them)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.slo_ms > 0 and (args.replicas > 1 or args.fault_plan):
+        ap.error("--slo-ms is a wall-clock SLO; the replica router runs on "
+                 "a deterministic tick clock (drop --replicas/--fault-plan, "
+                 "or use deadline-free requests with the fleet)")
 
     if args.workload == "snn":
         serve_snn(args)

@@ -1,19 +1,25 @@
-"""Unified serving: one engine core, pluggable LM and SNN runners.
+"""Unified serving: one engine core, pluggable LM and SNN runners, and a
+fault-tolerant multi-replica router.
 
-See README.md in this directory for the Request/Result/Runner API.
+See README.md in this directory for the Request/Result/Runner API and the
+failure model.
 """
-from .api import (EngineConfig, ModelRunner, PAD_REQUEST_ID, QueueFull,
-                  Request, Result, RunnerSession, SlotProgress, StepBudget,
-                  StepReport)
-from .core import EngineCore, StepClock
-from .engine import ServeEngine
+from .api import (EngineConfig, EngineStalled, ModelRunner, PAD_REQUEST_ID,
+                  QueueFull, Request, Result, RunnerSession, SlotProgress,
+                  StepBudget, StepReport)
+from .core import EngineCore, StepClock, all_finite
+from .faults import (Fault, FaultError, FaultPlan, FaultyRunner, TickClock,
+                     flood_queue, parse_fleet_plan)
+from .router import Router, make_router
 from .scheduler import (FIFOScheduler, Scheduler, SLOScheduler,
                         SparsityAwareScheduler, make_scheduler)
 
 __all__ = [
-    "EngineConfig", "EngineCore", "FIFOScheduler", "ModelRunner",
-    "PAD_REQUEST_ID", "QueueFull", "Request", "Result", "RunnerSession",
-    "SLOScheduler", "Scheduler", "ServeEngine", "SlotProgress",
+    "EngineConfig", "EngineCore", "EngineStalled", "FIFOScheduler", "Fault",
+    "FaultError", "FaultPlan", "FaultyRunner", "ModelRunner",
+    "PAD_REQUEST_ID", "QueueFull", "Request", "Result", "Router",
+    "RunnerSession", "SLOScheduler", "Scheduler", "SlotProgress",
     "SparsityAwareScheduler", "StepBudget", "StepClock", "StepReport",
-    "make_scheduler",
+    "TickClock", "all_finite", "flood_queue", "make_router",
+    "make_scheduler", "parse_fleet_plan",
 ]

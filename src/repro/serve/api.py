@@ -122,10 +122,23 @@ class Result:
     prefill), ``ttft_steps`` (session steps from admission through the step
     that emitted the first generated token).
 
-    status: lifecycle outcome — 'ok' (ran to completion), 'cancelled'
-    (caller `EngineCore.cancel`), or 'expired' (deadline passed before
-    completion). Non-'ok' results carry whatever partial outputs/stats the
-    runner had produced.
+    status: lifecycle outcome —
+
+    ``'ok'``        ran to completion.
+    ``'cancelled'`` caller `EngineCore.cancel`.
+    ``'expired'``   deadline passed before completion (queued or resident).
+    ``'failed'``    the engine's numerics screen caught NaN/Inf in the
+                    slot's step outputs and retired the request before the
+                    poison could propagate (`EngineConfig.numerics_screen`),
+                    or a supervised router exhausted the request's retry
+                    budget re-routing it off faulted replicas
+                    (`serve.router.Router`).
+    ``'rejected'``  shed under sustained overload before ever running — the
+                    router's explicit alternative to silently blowing the
+                    deadline of everything behind it (`serve.router`).
+
+    Non-'ok' results carry whatever partial outputs/stats the runner had
+    produced ('rejected' requests never ran, so they carry none).
     """
     request_id: int
     outputs: Any
@@ -236,16 +249,38 @@ class EngineConfig:
                prompts from holding goodput down for their whole prefill.
                Bit-identical outputs for any value (chunking only regroups
                the same masked per-token launches).
+    max_idle_steps: stall guard for `EngineCore.run_until_complete` — after
+               this many *consecutive* steps in which no slot made progress
+               (no work units consumed, nothing retired, nothing admitted)
+               the drain raises `EngineStalled` with diagnostics instead of
+               spinning forever on a wedged session. 0 disables the guard
+               (the pre-fault-tolerance behavior); per-call override via
+               ``run_until_complete(max_idle_steps=...)``.
+    numerics_screen: screen every step's emitted partials and finished
+               results for NaN/Inf; a poisoned slot is retired with
+               ``status='failed'`` (partials preserved) instead of feeding
+               the poison onward or corrupting batchmates' steps.
     """
     slots: int = 8
     max_queue: int = 256
     admission: str = "continuous"
     scheduler: str = "fifo"
     prefill_chunk: int = 1
+    max_idle_steps: int = 1000
+    numerics_screen: bool = True
 
 
 class QueueFull(RuntimeError):
     """Raised by `EngineCore.submit` when the admission queue is at capacity."""
+
+
+class EngineStalled(RuntimeError):
+    """Raised by `EngineCore.run_until_complete` when no slot has made
+    progress for `EngineConfig.max_idle_steps` consecutive steps — the
+    wedged-session failure mode surfaced as a diagnosis instead of an
+    infinite spin. The message carries the stalled residents and queue
+    depth; a supervising router catches the same condition earlier via its
+    per-step heartbeat (`serve.router.Router`)."""
 
 
 @runtime_checkable

@@ -47,6 +47,14 @@ Request lifecycle beyond completion (continuous admission):
   (queued or resident), and a scheduler ``expire`` hook may evict
   provably-late residents early. The clock is injectable (``clock=``) so
   tests and benchmarks can drive deadlines deterministically in steps.
+* **fault containment** — every step's emitted partials and finished
+  results pass a NaN/Inf screen (``EngineConfig.numerics_screen``); a
+  poisoned slot is retired with ``status='failed'`` (clean partials
+  preserved) instead of streaming the poison or corrupting its own next
+  step, and `run_until_complete(max_idle_steps=...)` raises
+  `api.EngineStalled` instead of spinning forever when no slot makes
+  progress. `serve.router.Router` builds fleet-level supervision (drain +
+  replay re-route) on these per-engine guarantees.
 
 Per-step occupancy/goodput accounting lives on `stats()`; the admission
 history (which requests entered which step) on `admission_log`.
@@ -58,9 +66,33 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
-from .api import (EngineConfig, ModelRunner, QueueFull, Request, Result,
-                  RunnerSession, SlotProgress, StepBudget)
+import numpy as np
+
+from .api import (EngineConfig, EngineStalled, ModelRunner, QueueFull,
+                  Request, Result, RunnerSession, SlotProgress, StepBudget)
 from .scheduler import Scheduler, make_scheduler
+
+
+def all_finite(value) -> bool:
+    """True when ``value`` contains no NaN/Inf anywhere (recursing into
+    lists/tuples/dicts and array-likes). The numerics probe the engine (and
+    `serve.router.Router`) runs over step outputs: ints, strings, None and
+    non-numeric leaves are vacuously finite."""
+    if value is None or isinstance(value, (bool, int, str, bytes)):
+        return True
+    if isinstance(value, float):
+        return value == value and value not in (float("inf"), float("-inf"))
+    if isinstance(value, dict):
+        return all(all_finite(v) for v in value.values())
+    if isinstance(value, (list, tuple, set)):
+        return all(all_finite(v) for v in value)
+    if hasattr(value, "dtype"):
+        arr = np.asarray(value)
+        if not np.issubdtype(arr.dtype, np.floating) and \
+                not np.issubdtype(arr.dtype, np.complexfloating):
+            return True
+        return bool(np.isfinite(arr).all())
+    return True
 
 
 class StepClock:
@@ -143,6 +175,7 @@ class EngineCore:
         self._requests_done = 0
         self._cancelled = 0
         self._expired = 0
+        self._failed = 0               # numerics screen retirements
         self._steps_run = 0            # compute steps (== batches_run today)
         self._occupied_slot_steps = 0  # sum over steps of occupied slots
         self._decode_tokens = 0        # LM decode tokens emitted (goodput)
@@ -150,6 +183,9 @@ class EngineCore:
         #: [(step_index, [request_ids admitted])] — the scheduler's decisions,
         #: in order; tests and benchmarks read batch composition off this.
         self.admission_log: List[Tuple[int, List[int]]] = []
+        #: the last `StepReport` a continuous-admission step produced —
+        #: supervision surface for `serve.router.Router`'s health probes.
+        self.last_report: Optional[Any] = None
 
     # -- admission ----------------------------------------------------------
 
@@ -237,6 +273,8 @@ class EngineCore:
     def _count_retired(self, status: str) -> None:
         if status == "expired":
             self._expired += 1
+        elif status == "failed":
+            self._failed += 1
         else:
             self._cancelled += 1
 
@@ -271,11 +309,41 @@ class EngineCore:
             return self._step_batch()
         return self._step_continuous()
 
-    def run_until_complete(self) -> Dict[int, Result]:
+    def _progress_marker(self) -> Tuple[int, int, int, int]:
+        """Anything that changes between steps when the engine is healthy:
+        work consumed, requests retired (any status), queue drained."""
+        retired = (self._requests_done + self._cancelled + self._expired
+                   + self._failed)
+        return (retired, self._work_units, self._decode_tokens,
+                len(self._queue))
+
+    def run_until_complete(self, *,
+                           max_idle_steps: Optional[int] = None
+                           ) -> Dict[int, Result]:
         """Drain queue and live slots; returns every unretrieved result
-        keyed by id (retiring them from `poll`)."""
+        keyed by id (retiring them from `poll`).
+
+        max_idle_steps bounds the wedged-session failure mode: after that
+        many consecutive steps with zero progress (no work units, nothing
+        retired, queue unmoved) the drain raises `EngineStalled` naming the
+        stuck residents, instead of spinning forever on a session that
+        stopped advancing. Defaults to `EngineConfig.max_idle_steps`
+        (finite); 0 disables the guard.
+        """
+        limit = self.config.max_idle_steps if max_idle_steps is None \
+            else max_idle_steps
+        idle = 0
         while self._queue or self.in_flight():
+            before = self._progress_marker()
             self.step()
+            idle = 0 if self._progress_marker() != before else idle + 1
+            if limit and idle >= limit:
+                stuck = sorted(self._resident)
+                raise EngineStalled(
+                    f"no slot made progress for {idle} consecutive steps "
+                    f"(steps_run={self._steps_run}, resident request ids "
+                    f"{stuck}, queued={len(self._queue)}, last progress "
+                    f"phases={[ (p.request_id, p.phase, p.units_done, p.units_total) for p in self._progress.values() ]})")
         out, self._results = self._results, {}
         for rid in out:
             self._partials.pop(rid, None)
@@ -366,21 +434,52 @@ class EngineCore:
         self._decode_tokens += int(report.cost.get("decode_tokens", 0))
         self._work_units += int(report.cost.get("units", 0))
 
+        # numerics probe: a slot whose step outputs carry NaN/Inf is retired
+        # with status='failed' before the poison can stream to the caller or
+        # feed the slot's next step — batchmates are row-independent, so the
+        # retirement never perturbs them.
+        poisoned: Dict[int, SlotProgress] = {}
+        if self.config.numerics_screen:
+            for idx, prog in report.progress.items():
+                res = report.finished.get(idx)
+                if not all_finite(prog.emitted) or (
+                        res is not None and not (all_finite(res.outputs)
+                                                 and all_finite(res.stats))):
+                    poisoned[idx] = prog
+
         self._progress = dict(report.progress)
-        for prog in report.progress.values():
-            if prog.emitted:
+        for idx, prog in report.progress.items():
+            if prog.emitted and idx not in poisoned:
                 self._partials.setdefault(prog.request_id, []).extend(prog.emitted)
         hook = getattr(self.scheduler, "on_report", None)
         if hook is not None:
             hook(report, seconds=seconds, now=self._clock())
+        self.last_report = report
 
         for idx, res in report.finished.items():
             slot = self.slots[idx]
             assert slot.request_id == res.request_id, (slot.request_id,
                                                        res.request_id)
             self._progress.pop(idx, None)
+            if idx in poisoned:
+                # finished but poisoned: surface the result as 'failed'
+                # (outputs/stats kept for diagnosis; clean partials already
+                # streamed stay available through poll_partial)
+                res = dataclasses.replace(res, status="failed")
+                req = self._resident.pop(res.request_id)
+                self.scheduler.observe(req, res)
+                self._results[res.request_id] = res
+                slot.release()
+                self._failed += 1
+                continue
             self._complete(slot, res)
             done += 1
+        for idx, prog in poisoned.items():
+            # mid-flight poison: reclaim the slot via the cancel path — the
+            # session rebuilds a clean partial Result (the poison lived only
+            # in the reported outputs, e.g. a fault wrapper's injection)
+            if idx not in report.finished and prog.request_id in self._resident:
+                self.cancel(prog.request_id, status="failed")
         return done
 
     # -- run-to-completion batching (PR-2 semantics) -------------------------
@@ -434,6 +533,7 @@ class EngineCore:
             "requests_done": self._requests_done,
             "cancelled": self._cancelled,
             "expired": self._expired,
+            "failed": self._failed,
             "pending": len(self._queue),
             "in_flight": self.in_flight(),
             "slots": self.config.slots,

@@ -1,0 +1,511 @@
+"""Supervised multi-replica serving: the fleet layer over `EngineCore`.
+
+The ROADMAP's fleet north star — N replicas behind one `submit()` — is only
+worth having if it *survives* the faults production traffic generates: a
+wedged session, a NaN-poisoned kernel, a queue flood. `Router` is that
+layer, in-process:
+
+* **load balancing** — `submit()` places each request on the healthy
+  replica with the cheapest estimated backlog: outstanding work units
+  (tokens/timesteps the router already routed there) priced by a learned
+  per-replica seconds-per-unit EWMA, the fleet-level counterpart of
+  `SLOScheduler`'s per-workload cost model. Streaming callers pass
+  ``affinity=`` to pin a stream's requests to one replica (KV locality).
+* **health supervision** — every `step()` the router advances each healthy
+  replica and probes it. Heartbeat: a replica holding work that makes no
+  progress (`EngineCore._progress_marker`) for ``wedge_patience``
+  consecutive steps — or whose step takes longer than the learned fleet
+  baseline times ``stall_factor`` (or an absolute ``stall_seconds``) — is
+  WEDGED. Numerics: a step that trips the engine's NaN/Inf screen
+  (``stats()['failed']`` delta, or non-finite `StepReport.cost`) marks the
+  replica POISONED. A replica whose ``step()`` raises is WEDGED with the
+  exception recorded. Either way it is drained and retired from placement.
+* **drain + re-route by deterministic replay** — in-flight requests on a
+  condemned replica are re-submitted from their frozen `Request` payloads
+  to a healthy replica. Runners are deterministic (greedy decode,
+  row-independent slots), so the replay is bit-identical to a fault-free
+  run; partials the caller already saw are deduplicated by count, and the
+  absolute deadline is preserved (the remaining budget is recomputed on
+  the shared clock). Each request carries ``max_retries`` re-routes; past
+  that it retires ``status='failed'``, past its deadline ``'expired'``.
+* **graceful overload** — `submit()` never raises: a replica's `QueueFull`
+  parks the request in a router-side waiting line with exponential backoff
+  (retry after 1, 2, 4, ... router steps), and when the line itself
+  overflows ``max_waiting`` the *lowest-priority* (then newest) waiters
+  are shed with ``status='rejected'`` — an explicit outcome instead of
+  silently blowing the deadline of everything behind them.
+
+The router speaks the same request surface as a single engine (`submit` /
+`poll` / `poll_partial` / `cancel` / `run_until_complete` / `stats`), so
+drivers like `launch/serve.py --replicas N` swap it in transparently.
+Fault schedules for chaos tests/benches come from `serve.faults`
+(`make_router(..., plans=...)` wraps each replica in a `FaultyRunner`).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Set
+
+from .api import (EngineConfig, EngineStalled, ModelRunner, QueueFull,
+                  Request, Result)
+from .core import EngineCore, all_finite
+from .faults import FaultPlan, FaultyRunner, TickClock
+
+#: replica lifecycle: healthy -> (wedged | poisoned) -> drained
+HEALTHY, WEDGED, POISONED, DRAINED = "healthy", "wedged", "poisoned", "drained"
+
+
+def _est_units(payload: Any, options: Mapping[str, Any]) -> int:
+    """Outstanding-work estimate for load balancing: prompt + decode tokens
+    for token-sequence (LM) payloads, 1 unit for anything else (an SNN
+    request completes in one fused step). Only relative magnitudes matter —
+    the same heuristic as `SLOScheduler._service_units`."""
+    prefill = len(payload) if isinstance(payload, (list, tuple)) else 0
+    return max(1, prefill + int(options.get("max_new_tokens", 0)))
+
+
+@dataclasses.dataclass
+class _Tracked:
+    """Router-side record of one submitted request — everything needed to
+    replay it from scratch on another replica."""
+    rid: int
+    payload: Any
+    options: Dict[str, Any]
+    priority: int
+    deadline_at: Optional[float]        # absolute, on the shared clock
+    affinity: Optional[Any]
+    retries_left: int
+    forwarded: int = 0                  # partial items surfaced to caller
+    skip: int = 0                       # replayed partials to drop (dedup)
+    attempts: int = 0                   # QueueFull backoff exponent
+
+
+class _Replica:
+    """One supervised `EngineCore` and its health bookkeeping."""
+
+    def __init__(self, idx: int, core: EngineCore):
+        self.idx = idx
+        self.core = core
+        self.state = HEALTHY
+        self.condition: Optional[str] = None    # why it left HEALTHY
+        self.reason: Optional[str] = None
+        self.idle_steps = 0                     # consecutive no-progress steps
+        self.placed: Dict[int, int] = {}        # local rid -> router rid
+        self.sec_per_unit = 1.0                 # EWMA, placement cost prior
+
+    def busy(self) -> bool:
+        return self.core.in_flight() > 0 or self.core.pending() > 0
+
+
+class Router:
+    """Fault-tolerant front end over N `EngineCore` replicas.
+
+    replicas share one engine clock (deadlines are absolute on it); build
+    fleets with `make_router`, which wires the shared clock and optional
+    per-replica `FaultPlan`s.
+
+    wedge_patience: consecutive no-progress steps of a busy replica before
+                    it is condemned as WEDGED.
+    stall_factor:   a step slower than ``stall_factor x`` the fastest
+                    observed fleet step is treated as a stall (wall-clock
+                    fleets); ``stall_seconds`` is the absolute variant for
+                    deterministic clocks, where healthy steps cost 0.
+    max_retries:    re-route budget per request; exhausting it retires the
+                    request ``status='failed'``.
+    max_waiting:    bound on the backoff line; beyond it the lowest-priority
+                    waiters are shed ``status='rejected'``.
+    tick_s:         seconds the router advances an owned `TickClock` per
+                    `step()` (deterministic deadline pacing, like
+                    `core.StepClock`); 0 leaves the clock alone.
+    """
+
+    def __init__(self, replicas: Sequence[EngineCore], *,
+                 clock: Optional[Callable[[], float]] = None,
+                 wedge_patience: int = 3, stall_factor: float = 8.0,
+                 stall_seconds: Optional[float] = None,
+                 max_retries: int = 2, max_waiting: int = 64,
+                 tick_s: float = 0.0):
+        assert replicas, "router needs at least one replica"
+        self.replicas = [_Replica(i, core) for i, core in enumerate(replicas)]
+        self._clock = clock if clock is not None else replicas[0]._clock
+        self.wedge_patience = max(1, wedge_patience)
+        self.stall_factor = stall_factor
+        self.stall_seconds = stall_seconds
+        self.max_retries = max_retries
+        self.max_waiting = max_waiting
+        self.tick_s = tick_s
+        self._next_id = 0
+        self._step_idx = 0
+        self._requests: Dict[int, _Tracked] = {}
+        self._placement: Dict[int, int] = {}        # router rid -> replica idx
+        self._results: Dict[int, Result] = {}
+        self._partials: Dict[int, List[Any]] = {}
+        self._outstanding: Set[int] = set()
+        self._waiting: Dict[int, int] = {}          # router rid -> due step
+        self._affinity: Dict[Any, int] = {}         # key -> replica idx
+        self._fastest_dt: Optional[float] = None    # learned fleet baseline
+        self._counts = collections.Counter()
+        self._rerouted = 0
+        #: [(router step, replica idx, condition, [router rids re-routed])]
+        #: — the supervision audit trail benches mine for recovery latency.
+        self.drain_log: List[tuple] = []
+        #: router rid -> router step of its terminal result
+        self.completed_at: Dict[int, int] = {}
+
+    # -- request surface -----------------------------------------------------
+
+    def submit(self, payload: Any, *, deadline_s: Optional[float] = None,
+               priority: int = 0, affinity: Optional[Any] = None,
+               **options: Any) -> int:
+        """Admit one request to the fleet; returns its router-scoped id.
+
+        Never raises `QueueFull`: overload parks the request in the backoff
+        line and, past ``max_waiting``, sheds by priority with
+        ``status='rejected'`` (see class docstring)."""
+        rid = self._next_id
+        self._next_id += 1
+        now = self._clock()
+        self._requests[rid] = _Tracked(
+            rid, payload, dict(options), priority,
+            None if deadline_s is None else now + deadline_s,
+            affinity, self.max_retries)
+        self._outstanding.add(rid)
+        self._try_place(rid)
+        return rid
+
+    def poll(self, request_id: int) -> Optional[Result]:
+        """Return (and retire) the terminal `Result`, or None while the
+        request is queued/running. Statuses: ok | cancelled | expired |
+        failed | rejected. Unlike `EngineCore.poll`, retrieving a *non-ok*
+        result keeps its undrained partials available to `poll_partial` —
+        for a failed/expired request the clean partial stream is the only
+        output there is ("partials intact")."""
+        res = self._results.pop(request_id, None)
+        if res is not None and res.status == "ok":
+            self._partials.pop(request_id, None)
+        return res
+
+    def poll_partial(self, request_id: int) -> List[Any]:
+        """Drain partial outputs streamed since the last call. Replayed
+        requests never re-deliver items the caller already saw."""
+        return self._partials.pop(request_id, [])
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a waiting or in-flight request fleet-wide."""
+        if request_id in self._waiting:
+            del self._waiting[request_id]
+            self._finish(request_id, Result(request_id, None, {}, "cancelled"))
+            return True
+        idx = self._placement.get(request_id)
+        if idx is None:
+            return False
+        replica = self.replicas[idx]
+        local = next(l for l, r in replica.placed.items() if r == request_id)
+        self._drain_partials(replica)
+        if not replica.core.cancel(local):
+            return False
+        del replica.placed[local]
+        res = replica.core.poll(local)
+        self._finish(request_id,
+                     res if res is not None
+                     else Result(request_id, None, {}, "cancelled"))
+        return True
+
+    # -- placement -----------------------------------------------------------
+
+    def _healthy(self) -> List[_Replica]:
+        return [r for r in self.replicas if r.state == HEALTHY]
+
+    def _outstanding_units(self, replica: _Replica) -> int:
+        units = 0
+        for rid in replica.placed.values():
+            t = self._requests.get(rid)
+            if t is not None:
+                units += _est_units(t.payload, t.options)
+        return units
+
+    def _pick_replica(self, tracked: _Tracked) -> Optional[_Replica]:
+        healthy = self._healthy()
+        if not healthy:
+            return None
+        if tracked.affinity is not None:
+            pinned = self._affinity.get(tracked.affinity)
+            if pinned is not None and self.replicas[pinned].state == HEALTHY:
+                return self.replicas[pinned]
+        est = _est_units(tracked.payload, tracked.options)
+        best = min(healthy, key=lambda r: (
+            (self._outstanding_units(r) + r.core.pending() + est)
+            * r.sec_per_unit, r.idx))
+        if tracked.affinity is not None:
+            self._affinity[tracked.affinity] = best.idx
+        return best
+
+    def _try_place(self, rid: int) -> bool:
+        """Place a tracked request on the best healthy replica; on
+        `QueueFull` park it in the backoff line. Returns True if placed."""
+        tracked = self._requests[rid]
+        now = self._clock()
+        if tracked.deadline_at is not None and now >= tracked.deadline_at:
+            self._waiting.pop(rid, None)
+            self._finish(rid, Result(rid, None, {}, "expired"))
+            return False
+        replica = self._pick_replica(tracked)
+        if replica is None:
+            # every replica condemned: nothing can ever run this request
+            self._waiting.pop(rid, None)
+            self._finish(rid, Result(rid, None, {}, "failed"))
+            return False
+        deadline_s = (None if tracked.deadline_at is None
+                      else tracked.deadline_at - now)
+        try:
+            local = replica.core.submit(tracked.payload,
+                                        deadline_s=deadline_s,
+                                        priority=tracked.priority,
+                                        **tracked.options)
+        except QueueFull:
+            tracked.attempts += 1
+            self._waiting[rid] = self._step_idx + 2 ** (tracked.attempts - 1)
+            self._shed_overflow()
+            return False
+        self._waiting.pop(rid, None)
+        replica.placed[local] = rid
+        self._placement[rid] = replica.idx
+        return True
+
+    def _shed_overflow(self) -> None:
+        while len(self._waiting) > self.max_waiting:
+            rid = min(self._waiting,
+                      key=lambda r: (self._requests[r].priority, -r))
+            del self._waiting[rid]
+            self._finish(rid, Result(rid, None, {}, "rejected"))
+
+    # -- supervision ---------------------------------------------------------
+
+    def step(self) -> int:
+        """Advance the fleet one supervision round; returns requests that
+        reached a terminal result this round. Order: retry waiters, step +
+        probe every healthy replica, collect partials/results, drain and
+        re-route condemned replicas."""
+        self._step_idx += 1
+        if self.tick_s and hasattr(self._clock, "advance"):
+            self._clock.advance(self.tick_s)
+        finished_before = sum(self._counts.values())
+
+        for rid, due in sorted(self._waiting.items(),
+                               key=lambda kv: (-self._requests[kv[0]].priority,
+                                               kv[0])):
+            if due <= self._step_idx:
+                self._try_place(rid)
+
+        for replica in list(self.replicas):
+            if replica.state != HEALTHY:
+                continue
+            if not replica.busy():
+                replica.idle_steps = 0
+                continue
+            marker0 = replica.core._progress_marker()
+            failed0 = replica.core._failed
+            t0 = self._clock()
+            try:
+                replica.core.step()
+            except Exception as e:          # mid-step fault: condemn replica
+                self._condemn(replica, WEDGED, f"step raised: {e!r}")
+                continue
+            dt = self._clock() - t0
+            self._drain_partials(replica)
+            self._collect_results(replica)
+            self._learn_cost(replica, marker0, dt)
+            if replica.core._failed > failed0 or (
+                    replica.core.last_report is not None
+                    and not all_finite(replica.core.last_report.cost)):
+                self._condemn(replica, POISONED,
+                              "numerics screen tripped on step outputs")
+                continue
+            if self._stalled(dt):
+                self._condemn(replica, WEDGED,
+                              f"step took {dt:.3f}s vs fleet baseline "
+                              f"{self._fastest_dt}")
+                continue
+            if replica.core._progress_marker() == marker0 and replica.busy():
+                replica.idle_steps += 1
+                if replica.idle_steps >= self.wedge_patience:
+                    self._condemn(replica, WEDGED,
+                                  f"no progress for {replica.idle_steps} "
+                                  "consecutive steps with work resident")
+            else:
+                replica.idle_steps = 0
+        return sum(self._counts.values()) - finished_before
+
+    def _learn_cost(self, replica: _Replica, marker0, dt: float) -> None:
+        units = replica.core._progress_marker()[1] - marker0[1]
+        if dt > 0:
+            self._fastest_dt = dt if self._fastest_dt is None \
+                else min(self._fastest_dt, dt)
+            if units > 0:
+                sample = dt / units
+                replica.sec_per_unit = (0.3 * sample
+                                        + 0.7 * replica.sec_per_unit)
+
+    def _stalled(self, dt: float) -> bool:
+        if self.stall_seconds is not None and dt >= self.stall_seconds:
+            return True
+        return (self._fastest_dt is not None and dt > 0
+                and dt > self.stall_factor * self._fastest_dt
+                and self._fastest_dt > 0)
+
+    def _drain_partials(self, replica: _Replica) -> None:
+        for local, rid in list(replica.placed.items()):
+            items = replica.core.poll_partial(local)
+            if not items:
+                continue
+            tracked = self._requests.get(rid)
+            if tracked is None:
+                continue
+            fresh: List[Any] = []
+            for item in items:
+                if tracked.skip > 0:    # replay re-emitted a seen partial
+                    tracked.skip -= 1
+                    continue
+                fresh.append(item)
+            if fresh:
+                tracked.forwarded += len(fresh)
+                self._partials.setdefault(rid, []).extend(fresh)
+
+    def _collect_results(self, replica: _Replica) -> None:
+        for local, rid in list(replica.placed.items()):
+            res = replica.core.poll(local)
+            if res is None:
+                continue
+            del replica.placed[local]
+            self._finish(rid, res)
+
+    def _condemn(self, replica: _Replica, condition: str, reason: str) -> None:
+        """Mark a replica WEDGED/POISONED, salvage what it finished, and
+        re-route its in-flight requests by deterministic replay."""
+        replica.condition = condition
+        replica.reason = reason
+        replica.state = condition
+        self._drain_partials(replica)
+        self._collect_results(replica)      # salvage already-finished work
+        rerouted: List[int] = []
+        now = self._clock()
+        for local, rid in list(replica.placed.items()):
+            tracked = self._requests.get(rid)
+            # reclaim the slot/queue entry; the inner session is clean, so
+            # this cannot disturb anything else on the replica
+            replica.core.cancel(local)
+            self._drain_partials(replica)
+            salvage = replica.core.poll(local)
+            del replica.placed[local]
+            self._placement.pop(rid, None)
+            if tracked is None:
+                continue
+            if tracked.deadline_at is not None and now >= tracked.deadline_at:
+                self._finish(rid, dataclasses.replace(
+                    salvage or Result(rid, None, {}), status="expired"))
+            elif tracked.retries_left > 0:
+                tracked.retries_left -= 1
+                tracked.skip = tracked.forwarded    # dedup the replay stream
+                rerouted.append(rid)
+                self._rerouted += 1
+                self._try_place(rid)
+            else:
+                self._finish(rid, dataclasses.replace(
+                    salvage or Result(rid, None, {}), status="failed"))
+        replica.state = DRAINED
+        self.drain_log.append((self._step_idx, replica.idx, condition,
+                               rerouted))
+
+    def _finish(self, rid: int, result: Result) -> None:
+        if result.request_id != rid:
+            result = dataclasses.replace(result, request_id=rid)
+        self._results[rid] = result
+        self._placement.pop(rid, None)
+        self._outstanding.discard(rid)
+        self._requests.pop(rid, None)
+        self._counts[result.status] += 1
+        self.completed_at[rid] = self._step_idx
+
+    # -- drain loop ----------------------------------------------------------
+
+    def run_until_complete(self, *, max_idle_steps: Optional[int] = None
+                           ) -> Dict[int, Result]:
+        """Step the fleet until every submitted request has a terminal
+        result; returns (and retires) all unpolled results. Raises
+        `EngineStalled` after ``max_idle_steps`` consecutive rounds with no
+        fleet-wide progress (default: the first replica's configured
+        guard) — possible only if supervision itself cannot retire the
+        stuck work (e.g. the guard is set too tight)."""
+        limit = (self.replicas[0].core.config.max_idle_steps
+                 if max_idle_steps is None else max_idle_steps)
+        idle = 0
+        while self._outstanding:
+            before = self._fleet_marker()
+            self.step()
+            idle = 0 if self._fleet_marker() != before else idle + 1
+            if limit and idle >= limit:
+                raise EngineStalled(
+                    f"fleet made no progress for {idle} consecutive router "
+                    f"steps (outstanding={sorted(self._outstanding)}, "
+                    f"states={[r.state for r in self.replicas]}, "
+                    f"waiting={sorted(self._waiting)})")
+        out, self._results = self._results, {}
+        for rid, res in out.items():
+            if res.status == "ok":      # non-ok keeps partials pollable
+                self._partials.pop(rid, None)
+        return out
+
+    def _fleet_marker(self) -> tuple:
+        return (sum(self._counts.values()), len(self._waiting),
+                tuple(r.core._progress_marker() for r in self.replicas),
+                tuple(r.state for r in self.replicas))
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "router_steps": self._step_idx,
+            "replicas": [{
+                "idx": r.idx,
+                "state": r.state,
+                "condition": r.condition,
+                "reason": r.reason,
+                "sec_per_unit": r.sec_per_unit,
+                "stats": r.core.stats(),
+            } for r in self.replicas],
+            "healthy": len(self._healthy()),
+            "rerouted": self._rerouted,
+            "waiting": len(self._waiting),
+            "outstanding": len(self._outstanding),
+            "drains": len(self.drain_log),
+            **{status: self._counts.get(status, 0)
+               for status in ("ok", "cancelled", "expired", "failed",
+                              "rejected")},
+        }
+
+
+def make_router(runner: ModelRunner, n: int,
+                config: EngineConfig = EngineConfig(), *,
+                plans: Optional[Mapping[int, FaultPlan]] = None,
+                clock: Optional[Callable[[], float]] = None,
+                **router_kwargs) -> Router:
+    """Build an N-replica fleet over one `ModelRunner`.
+
+    Every replica gets its own `EngineCore` (own queue, slots, sessions)
+    over the shared ``runner``, wrapped in a `serve.faults.FaultyRunner` so
+    replica behavior differs only by its `FaultPlan` (``plans`` maps
+    replica index -> plan; missing indices get the empty, transparent
+    plan). All replicas and the router share one clock; when none is
+    passed, a deterministic `TickClock` advanced 1 s per router step is
+    created — the fleet analogue of `core.StepClock`."""
+    owned = clock is None
+    if owned:
+        clock = TickClock()
+    plans = dict(plans or {})
+    cores = [EngineCore(FaultyRunner(runner, plans.get(i), clock),
+                        config, clock=clock)
+             for i in range(n)]
+    if owned:
+        router_kwargs.setdefault("tick_s", 1.0)
+    return Router(cores, clock=clock, **router_kwargs)

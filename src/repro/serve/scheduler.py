@@ -258,12 +258,16 @@ class SLOScheduler:
     sparsity co-batching for the non-deadlined stream).
 
     The cost model is learned, not configured: every `StepReport` the engine
-    forwards through ``on_report`` updates the *fastest observed* seconds
-    per engine step. A minimum (not a mean) keeps every estimate built on
-    it a lower bound on real service — required for the never-evict-the-
-    feasible guarantee below — and makes the model immune to wall-clock
-    outliers like the XLA compile on a step's first launch width. On top
-    of it:
+    forwards through ``on_report`` updates two *fastest observed* figures —
+    seconds per engine step, and seconds per *work unit* (LM token / SNN
+    timestep) keyed by workload kind. Deadline estimates prefer the per-unit
+    model: the step model prices every step at the fastest observed step
+    (usually a wide prefill chunk), so mixed chunk widths misprice decode-
+    heavy requests; seconds-per-unit is invariant to chunking. A minimum
+    (not a mean) keeps every estimate built on it a lower bound on real
+    service — required for the never-evict-the-feasible guarantee below —
+    and makes the model immune to wall-clock outliers like the XLA compile
+    on a step's first launch width. On top of it:
 
     * ``plan_step`` sets the step's `StepBudget` split — a prefilling
       resident racing its deadline gets its chunk boosted to
@@ -295,6 +299,10 @@ class SLOScheduler:
         self.boost_cap = max(1, boost_cap)
         # fastest observed step: the optimistic (lower-bound) cost model
         self._sec_per_step: Optional[float] = None
+        # fastest observed seconds per *work unit* (LM token / SNN timestep),
+        # keyed by workload kind — see `_estimate_seconds` for why the step
+        # model alone misprices mixed chunk widths
+        self._sec_per_unit: Dict[str, float] = {}
         self._now = 0.0
 
     def on_clock(self, now: float) -> None:
@@ -328,11 +336,65 @@ class SLOScheduler:
         prefill = len(payload) if isinstance(payload, (list, tuple)) else 0
         return prefill, int(request.options.get("max_new_tokens", 0))
 
+    @staticmethod
+    def _request_kind(request: Request) -> str:
+        """Workload kind for the per-unit cost model. Mirrors the
+        `_service_units` heuristic: a token-sequence payload is LM work
+        (units = tokens), anything else is treated as SNN work (units =
+        timesteps)."""
+        return "lm" if isinstance(request.payload, (list, tuple)) else "snn"
+
+    @staticmethod
+    def _report_kind(cost: Mapping) -> Optional[str]:
+        """Workload kind of a `StepReport.cost` dict, by the fields the
+        runners actually emit: LM steps break units down into prompt/decode
+        tokens, SNN steps report timesteps."""
+        if "prompt_tokens" in cost or "decode_tokens" in cost:
+            return "lm"
+        if "timesteps" in cost:
+            return "snn"
+        return None
+
+    def _optimistic_units(self, prefill_rem: int, decode_rem: int) -> int:
+        """Lower bound on remaining *work units* (tokens): every prompt
+        token plus every decode token, minus one when both phases remain —
+        the forward pass that consumes the last prompt token also emits the
+        first decode token."""
+        units = prefill_rem + decode_rem
+        if prefill_rem > 0 and decode_rem > 0:
+            units -= 1
+        return units
+
+    def _estimate_seconds(self, prefill_rem: int, decode_rem: int,
+                          kind: str) -> Optional[float]:
+        """Optimistic (lower-bound) seconds of remaining service.
+
+        Prefers the per-unit model when it has been learned for ``kind``:
+        the step model prices every step at the fastest *observed* step —
+        usually a wide prefill chunk — so a decode phase of N one-token
+        steps is under-priced by up to the chunk width, while conversely a
+        request whose remaining work is mostly prefill is over-priced when
+        the fastest step was a narrow decode. Seconds-per-unit is invariant
+        to how the engine chunks the work, so mixed chunk widths no longer
+        misprice deadlines. Falls back to the step model until a costed
+        report for ``kind`` arrives; None when nothing is learned yet.
+        """
+        spu = self._sec_per_unit.get(kind)
+        if spu is not None:
+            return self._optimistic_units(prefill_rem, decode_rem) * spu
+        if self._sec_per_step is not None:
+            return (self._optimistic_steps(prefill_rem, decode_rem)
+                    * self._sec_per_step)
+        return None
+
     def _hopeless(self, request: Request, now: float) -> bool:
-        if self._sec_per_step is None or request.deadline_at is None:
+        if request.deadline_at is None:
             return False
         prefill, decode = self._service_units(request)
-        est = self._optimistic_steps(prefill, decode) * self._sec_per_step
+        est = self._estimate_seconds(prefill, decode,
+                                     self._request_kind(request))
+        if est is None:
+            return False
         return now + est > request.deadline_at
 
     # -- Scheduler protocol -------------------------------------------------
@@ -400,17 +462,22 @@ class SLOScheduler:
     def on_report(self, report: StepReport, *, seconds: float,
                   now: float) -> None:
         self._now = now
-        if seconds > 0:
-            old = self._sec_per_step
-            self._sec_per_step = seconds if old is None else min(old, seconds)
+        if seconds <= 0:
+            return
+        old = self._sec_per_step
+        self._sec_per_step = seconds if old is None else min(old, seconds)
+        units = int(report.cost.get("units", 0) or 0)
+        kind = self._report_kind(report.cost)
+        if units > 0 and kind is not None:
+            spu = seconds / units
+            prev = self._sec_per_unit.get(kind)
+            self._sec_per_unit[kind] = spu if prev is None else min(prev, spu)
 
     def expire(self, residents: Mapping[int, Request],
                progress: Mapping[int, SlotProgress], *,
                now: float) -> List[int]:
         self._now = now
         out: List[int] = []
-        if self._sec_per_step is None:
-            return out
         for slot, req in residents.items():
             prog = progress.get(slot)
             if req.deadline_at is None or prog is None:
@@ -422,8 +489,9 @@ class SLOScheduler:
             else:
                 prefill_rem = 0
                 decode_rem = max(0, prog.units_total - prog.units_done)
-            est = self._optimistic_steps(prefill_rem, decode_rem) * self._sec_per_step
-            if now + est > req.deadline_at:
+            est = self._estimate_seconds(prefill_rem, decode_rem,
+                                         self._request_kind(req))
+            if est is not None and now + est > req.deadline_at:
                 out.append(req.request_id)
         return out
 

@@ -1,11 +1,9 @@
 """Serving engine: batched greedy generation + int4-weight numerics.
 
 Ported off the seed-era `ServeEngine` shim onto `EngineCore` + `LMRunner`
-directly; the shim survives one release as a `DeprecationWarning` alias
+directly; the shim's one-release deprecation alias is now fully removed
 (asserted at the bottom).
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -95,13 +93,11 @@ def test_int4_serving_quantizes_weights():
     assert len(out) == 5
 
 
-def test_serve_engine_alias_warns_and_works():
-    """The retired shim: one release of DeprecationWarning, same outputs as
-    the EngineCore + LMRunner it delegates to."""
-    from repro.serve.engine import ServeEngine
-    params = _params()
-    with pytest.warns(DeprecationWarning, match="ServeEngine is deprecated"):
-        engine = ServeEngine(CFG, params, batch_slots=2, max_seq=32)
-    out = engine.generate([[1, 2, 3], [5]], 4)
-    runner = LMRunner(CFG, params, max_seq=32)
-    assert out == _generate(runner, [[1, 2, 3], [5]], 4, slots=2)
+def test_serve_engine_alias_removed():
+    """PR 5 marked `ServeEngine` one-release; this release removes it: the
+    module is gone and the package exports no trace of the name."""
+    import repro.serve
+    assert not hasattr(repro.serve, "ServeEngine")
+    assert "ServeEngine" not in repro.serve.__all__
+    with pytest.raises(ModuleNotFoundError):
+        import repro.serve.engine  # noqa: F401

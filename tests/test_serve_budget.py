@@ -14,8 +14,10 @@ lifecycle built on it:
 * `poll_partial` streams LM tokens incrementally and per-timestep SNN
   sparsity stats;
 * the `SLOScheduler` orders admission by deadline/priority, splits the
-  step budget toward slots racing a deadline, and composes over the
-  sparsity scheduler via ``make_scheduler('slo:sparsity')``.
+  step budget toward slots racing a deadline, composes over the sparsity
+  scheduler via ``make_scheduler('slo:sparsity')``, and prices deadlines
+  with a chunk-invariant sec-per-*unit* model per workload kind (the step
+  model alone mispriced decode work under mixed chunk widths).
 """
 import jax
 import numpy as np
@@ -293,6 +295,37 @@ def test_slo_expire_evicts_only_provably_late():
     }
     # slot 0 has plenty of slack; slot 1 needs >= 41 steps for 3 s of slack
     assert sched.expire(residents, progress, now=2.0) == [1]
+
+
+def test_slo_sec_per_unit_fixes_mixed_chunk_mispricing():
+    """Regression: with only the *step*-time model, a 1 s chunk-64 prefill
+    step teaches the scheduler 1 s/step, so a decode-only resident (one
+    token per step) is priced ~64x slower than reality and gets evicted
+    despite having plenty of slack. Learning seconds-per-*unit* from the
+    same report prices the decode correctly — the estimate is invariant to
+    how the engine chunked the observed work."""
+    residents = {0: _req(0, payload=[0] * 8, deadline_s=10.0,
+                         max_new_tokens=40)}
+    progress = {0: SlotProgress(0, "decode", units_done=12, units_total=48)}
+
+    naive = SLOScheduler()
+    naive.on_report(StepReport(), seconds=1.0, now=1.0)    # step model only
+    assert naive.expire(residents, progress, now=2.0) == [0]   # mispriced
+
+    sched = SLOScheduler()
+    # the same observation, but costed the way LMSession reports it: the
+    # 1 s step covered 64 prompt tokens -> 1/64 s per token
+    sched.on_report(StepReport(cost={"units": 64, "prompt_tokens": 64}),
+                    seconds=1.0, now=1.0)
+    assert sched._sec_per_unit["lm"] == pytest.approx(1 / 64)
+    # 36 remaining tokens ~ 0.56 s of slack needed, deadline 8 s out: kept
+    assert sched.expire(residents, progress, now=2.0) == []
+    # per-kind isolation: a slower SNN observation must not reprice LM work
+    sched.on_report(StepReport(cost={"units": 4, "timesteps": 4}),
+                    seconds=2.0, now=3.0)
+    assert sched._sec_per_unit["snn"] == pytest.approx(0.5)
+    assert sched._sec_per_unit["lm"] == pytest.approx(1 / 64)
+    assert sched.expire(residents, progress, now=2.0) == []
 
 
 def test_make_scheduler_composes_slo_over_sparsity():

@@ -1,0 +1,276 @@
+"""Fault-injection harness + per-engine graceful degradation.
+
+Covers the `serve.faults` layer in isolation (plan parsing, the wrapper
+session's five fault kinds, NaN shape preservation), the engine-level
+containment it exercises (`EngineStalled` instead of an infinite spin on a
+wedged session; numerics screen retiring poisoned slots as ``'failed'``
+with clean partials, batchmates bit-identical), and the slot-lifecycle
+invariants: seeded random interleavings of submit/cancel/expire/fail under
+random fault schedules never leak a slot or double-release one.
+
+Everything here runs on the pure-python stub runner — no jax.
+"""
+import random
+
+import pytest
+
+from repro.serve.api import (EngineConfig, EngineStalled, Request,
+                             StepBudget)
+from repro.serve.core import EngineCore, StepClock, all_finite
+from repro.serve.faults import (Fault, FaultError, FaultPlan, FaultyRunner,
+                                TickClock, flood_queue, parse_fleet_plan,
+                                poison)
+
+from test_serve_continuous import StubRunner
+
+
+def _core(runner=None, **cfg):
+    cfg.setdefault("slots", 2)
+    return EngineCore(runner if runner is not None else StubRunner(),
+                      EngineConfig(**cfg), clock=StepClock())
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / parsing
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse():
+    plan = FaultPlan.parse("wedge@3;nan@5-7:slot=0;slow@2:seconds=3.5")
+    assert plan.active("wedge", 2) is None
+    assert plan.active("wedge", 3).kind == "wedge"      # open-ended
+    assert plan.active("wedge", 99) is not None
+    nan = plan.active("nan", 5)
+    assert nan.slot == 0 and plan.active("nan", 6) is nan
+    assert plan.active("nan", 7) is None                # half-open [5, 7)
+    assert plan.active("slow", 2).seconds == 3.5
+    assert plan.active("raise", 2) is None
+    assert FaultPlan.parse("").faults == ()
+
+
+def test_fault_plan_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("wedge3")                       # missing @
+    with pytest.raises(ValueError):
+        FaultPlan.parse("meteor@3")                     # unknown kind
+    with pytest.raises(ValueError):
+        FaultPlan.parse("nan@3:wat=1")                  # unknown option
+
+
+def test_parse_fleet_plan():
+    plans = parse_fleet_plan("1=wedge@3,2=nan@5:slot=0;raise@9")
+    assert set(plans) == {1, 2}
+    assert plans[1].active("wedge", 3) is not None
+    assert plans[2].active("nan", 5).slot == 0
+    assert plans[2].active("raise", 9) is not None
+    with pytest.raises(ValueError):
+        parse_fleet_plan("wedge@3")                     # missing IDX=
+
+
+def test_tick_clock():
+    clock = TickClock()
+    assert clock() == 0.0
+    clock.advance(2.5)
+    assert clock() == 2.5
+
+
+def test_poison_preserves_shape():
+    np = pytest.importorskip("numpy")
+    out = poison({"a": [1, 2.0], "b": ("x", 3), "c": np.ones((2, 2))})
+    assert out["a"][0] != out["a"][0] and out["a"][1] != out["a"][1]  # NaN
+    assert out["b"][0] == "x" and out["b"][1] != out["b"][1]
+    assert out["c"].shape == (2, 2) and not all_finite(out["c"])
+    assert all_finite(poison({"meta": "tag", "flag": True, "none": None}))
+
+
+# ---------------------------------------------------------------------------
+# FaultySession semantics
+# ---------------------------------------------------------------------------
+
+def _session(plan, clock=None, slots=2):
+    runner = FaultyRunner(StubRunner(), FaultPlan.parse(plan), clock)
+    return runner.open_session(slots)
+
+
+def test_wedge_makes_no_progress_and_leaves_inner_untouched():
+    sess = _session("wedge@1-3")
+    sess.admit(0, Request(1, {"key": "a", "steps": 2}))
+    r0 = sess.step(StepBudget())
+    assert r0.progress[0].units_done == 1
+    for _ in range(2):                                  # steps 1, 2: wedged
+        rep = sess.step(StepBudget())
+        assert not rep.progress and not rep.finished
+        assert rep.cost == {"units": 0}
+    rep = sess.step(StepBudget())                       # step 3: resumes
+    assert 0 in rep.finished and rep.progress[0].units_done == 2
+
+
+def test_raise_fault_raises():
+    sess = _session("raise@1:message=boom")
+    sess.admit(0, Request(1, {"key": "a", "steps": 3}))
+    sess.step(StepBudget())
+    with pytest.raises(FaultError, match="boom"):
+        sess.step(StepBudget())
+
+
+def test_slow_fault_advances_clock():
+    clock = TickClock()
+    sess = _session("slow@0-1:seconds=4.0", clock=clock)
+    sess.admit(0, Request(1, {"key": "a", "steps": 2}))
+    sess.step(StepBudget())
+    assert clock() == 4.0                               # fault cost visible
+    sess.step(StepBudget())
+    assert clock() == 4.0                               # only step 0 slow
+
+
+def test_nan_fault_poisons_only_target_slot():
+    sess = _session("nan@0:slot=1")
+    sess.admit(0, Request(1, {"key": "a", "steps": 2}))
+    sess.admit(1, Request(2, {"key": "a", "steps": 2}))
+    rep = sess.step(StepBudget())
+    assert all_finite(rep.progress[0].emitted)          # slot 0 untouched
+    assert not all_finite(rep.progress[1].emitted)
+    # inner session state stays clean: a cancel yields an untouched partial
+    res = sess.cancel(1)
+    assert res.status == "cancelled" and all_finite(res.outputs)
+
+
+def test_flood_queue_fills_to_capacity():
+    core = _core(max_queue=5)
+    rids = flood_queue(core, {"key": "a", "steps": 1})
+    assert len(rids) == 5 and core.pending() == 5
+    assert flood_queue(core, {"key": "a", "steps": 1}) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine-level graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_run_until_complete_raises_on_wedged_session():
+    """Regression for the unbounded spin: a session that stops progressing
+    must surface `EngineStalled` diagnostics, not loop forever."""
+    runner = FaultyRunner(StubRunner(), FaultPlan.parse("wedge@1"))
+    core = _core(runner, max_idle_steps=7)
+    rid = core.submit({"key": "a", "steps": 5})
+    with pytest.raises(EngineStalled, match="7 consecutive steps") as ei:
+        core.run_until_complete()
+    assert str(rid) in str(ei.value)                    # names the stuck rid
+
+
+def test_run_until_complete_per_call_override_and_recovery():
+    """The guard is per-call overridable, and a *transient* wedge shorter
+    than the limit drains normally."""
+    runner = FaultyRunner(StubRunner(), FaultPlan.parse("wedge@1-4"))
+    core = _core(runner, max_idle_steps=2)
+    core.submit({"key": "a", "steps": 2})
+    results = core.run_until_complete(max_idle_steps=10)   # outlasts the wedge
+    assert len(results) == 1
+    assert next(iter(results.values())).status == "ok"
+
+
+def test_numerics_screen_retires_poisoned_slot_as_failed():
+    """NaN in a slot's step outputs: the request retires ``'failed'`` with
+    its clean pre-poison partials; the batchmate's outputs are identical to
+    a fault-free run."""
+    clean = _core()
+    a0 = clean.submit({"key": "a", "steps": 4})
+    b0 = clean.submit({"key": "a", "steps": 4})
+    ref = clean.run_until_complete()
+
+    runner = FaultyRunner(StubRunner(), FaultPlan.parse("nan@2:slot=0"))
+    core = _core(runner)
+    a = core.submit({"key": "a", "steps": 4})           # slot 0: poisoned
+    b = core.submit({"key": "a", "steps": 4})
+    core.step()
+    core.step()
+    pre_poison = core.poll_partial(a)
+    assert pre_poison == [1, 2] and all_finite(pre_poison)
+    results = core.run_until_complete()
+    assert results[a].status == "failed"
+    assert results[b].status == "ok"
+    assert results[b].outputs == ref[b0].outputs        # batchmate untouched
+    assert core.stats()["failed"] == 1
+    assert core.in_flight() == 0                        # slot reclaimed
+
+
+def test_numerics_screen_never_streams_poison():
+    runner = FaultyRunner(StubRunner(), FaultPlan.parse("nan@1"))
+    core = _core(runner, slots=1)
+    rid = core.submit({"key": "a", "steps": 3})
+    core.step()                       # clean: emits 1
+    core.step()                       # poisoned: retired, nothing streamed
+    assert core.poll_partial(rid) == [1]
+    assert core.poll(rid).status == "failed"
+
+
+def test_numerics_screen_can_be_disabled():
+    runner = FaultyRunner(StubRunner(), FaultPlan.parse("nan@0"))
+    core = _core(runner, slots=1, numerics_screen=False)
+    rid = core.submit({"key": "a", "steps": 1})
+    results = core.run_until_complete()
+    assert results[rid].status == "ok"                  # caller's problem now
+
+
+# ---------------------------------------------------------------------------
+# Slot-lifecycle invariants under random fault schedules
+# ---------------------------------------------------------------------------
+
+def _assert_slot_invariants(core, polled, submitted):
+    occupied = [s.request_id for s in core.slots if s.request_id is not None]
+    assert len(occupied) == len(set(occupied)), "slot holds duplicate rids"
+    assert set(occupied) == set(core._resident), \
+        "slot occupancy out of sync with resident map (leak/double-release)"
+    assert core.in_flight() == len(core._resident)
+    for rid in occupied:
+        assert rid not in polled, f"rid {rid} resident after terminal result"
+    assert set(polled) <= submitted
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_interleavings_never_leak_slots(seed):
+    """Property-style: random interleavings of submit / cancel / deadline
+    expiry / NaN-fault retirement, against a random fault schedule, keep
+    `_Slot.acquire/release` accounting exact after every step — and every
+    request ends with exactly one terminal result."""
+    rng = random.Random(seed)
+    faults = []
+    for step in sorted(rng.sample(range(2, 40), 6)):
+        faults.append(Fault("nan", step, stop=step + 1,
+                            slot=rng.randrange(3)))
+    if rng.random() < 0.5:
+        w = rng.randrange(10, 30)
+        faults.append(Fault("wedge", w, stop=w + rng.randrange(1, 4)))
+    runner = FaultyRunner(StubRunner(), FaultPlan(tuple(faults)))
+    core = _core(runner, slots=3, max_queue=16, max_idle_steps=0)
+
+    submitted, polled = set(), {}
+    live = []
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.45 and len(live) < 12:
+            rid = core.submit(
+                {"key": "a", "steps": rng.randrange(1, 5)},
+                deadline_s=rng.choice([None, None, float(rng.randrange(1, 6))]))
+            submitted.add(rid)
+            live.append(rid)
+        elif op < 0.6 and live:
+            core.cancel(rng.choice(live))
+        else:
+            core.step()
+        for rid in list(live):
+            res = core.poll(rid)
+            if res is not None:
+                assert rid not in polled, "double terminal result"
+                assert res.status in ("ok", "cancelled", "expired", "failed")
+                polled[rid] = res
+                live.remove(rid)
+        _assert_slot_invariants(core, polled, submitted)
+
+    results = core.run_until_complete()
+    for rid, res in results.items():
+        assert rid not in polled
+        polled[rid] = res
+    _assert_slot_invariants(core, polled, submitted)
+    assert set(polled) == submitted                 # exactly-once, no losses
+    admitted = {rid for _, group in core.admission_log for rid in group}
+    assert sum(s.served for s in core.slots) == len(admitted), \
+        "slot served-count disagrees with admissions (double-release?)"

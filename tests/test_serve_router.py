@@ -1,0 +1,263 @@
+"""Supervised multi-replica router: balancing, supervision, replay re-route.
+
+Stub-runner coverage (no jax) of every router behavior — load balancing,
+session affinity, QueueFull backoff + priority shedding, wedge/raise/NaN
+detection, drain + deterministic-replay re-route with partial dedup, retry
+budgets, deadline preservation — plus a router-level slot-invariant sweep
+and, at the bottom, the ISSUE-6 chaos acceptance test on the real LM
+runner: a 3-replica fleet with one replica wedged mid-stream and another
+NaN-poisoned completes every in-flight request, re-routed outputs
+bit-identical to a fault-free single-replica run.
+"""
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.serve.api import EngineConfig
+from repro.serve.core import EngineCore, StepClock, all_finite
+from repro.serve.faults import FaultPlan, flood_queue, parse_fleet_plan
+from repro.serve.router import make_router
+
+from test_serve_continuous import StubRunner
+
+CFG = EngineConfig(slots=2, max_queue=4)
+
+
+def _router(n=3, plans=None, config=CFG, **kw):
+    return make_router(StubRunner(), n, config, plans=plans, **kw)
+
+
+def _payload(steps=2, key="a"):
+    return {"key": key, "steps": steps}
+
+
+def _drive(router, rids, max_steps=400):
+    """Step the fleet to completion, draining each request's partial stream
+    as a live client would; returns (results, streams)."""
+    streams = {rid: [] for rid in rids}
+    for _ in range(max_steps):
+        router.step()
+        for rid in rids:
+            streams[rid].extend(router.poll_partial(rid))
+        if not router._outstanding:
+            break
+    assert not router._outstanding, "fleet did not converge"
+    return {rid: router.poll(rid) for rid in rids}, streams
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+def test_submit_balances_across_replicas():
+    router = _router(3)
+    for _ in range(6):
+        router.submit(_payload())
+    placed = [router._placement[rid] for rid in range(6)]
+    assert sorted(placed.count(i) for i in range(3)) == [2, 2, 2]
+    results = router.run_until_complete()
+    assert len(results) == 6
+    assert all(r.status == "ok" for r in results.values())
+
+
+def test_affinity_pins_stream_to_one_replica():
+    router = _router(3)
+    rids = [router.submit(_payload(), affinity="stream-7") for _ in range(4)]
+    assert len({router._placement[r] for r in rids}) == 1
+    other = router.submit(_payload())        # un-pinned: balances elsewhere
+    assert router._placement[other] != router._placement[rids[0]]
+    router.run_until_complete()
+
+
+def test_queue_full_backs_off_then_places():
+    """A full replica queue parks the request router-side; it is placed on
+    a later step once capacity frees — submit() never raises."""
+    router = _router(1, config=EngineConfig(slots=1, max_queue=1))
+    rids = [router.submit(_payload(1)) for _ in range(5)]
+    assert len(router._waiting) > 0          # overflow parked, not raised
+    results = router.run_until_complete()
+    assert sorted(results) == rids
+    assert all(r.status == "ok" for r in results.values())
+
+
+def test_overload_sheds_lowest_priority_as_rejected():
+    router = _router(1, config=EngineConfig(slots=1, max_queue=1),
+                     max_waiting=3)
+    high = [router.submit(_payload(1), priority=5) for _ in range(4)]
+    low = [router.submit(_payload(1), priority=0) for _ in range(4)]
+    results = router.run_until_complete()
+    assert all(results[r].status == "ok" for r in high)
+    shed = [r for r in low if results[r].status == "rejected"]
+    assert shed and all(results[r].outputs is None for r in shed)
+    assert router.stats()["rejected"] == len(shed)
+
+
+# ---------------------------------------------------------------------------
+# Supervision + re-route
+# ---------------------------------------------------------------------------
+
+def test_wedged_replica_is_drained_and_rerouted():
+    """The heartbeat condemns a busy no-progress replica after
+    ``wedge_patience`` steps; its in-flight request replays on a healthy
+    replica and completes — partials deduplicated, none lost."""
+    router = _router(2, plans={0: FaultPlan.parse("wedge@2")},
+                     wedge_patience=3)
+    rid = router.submit(_payload(steps=6))
+    assert router._placement[rid] == 0
+    results, streams = _drive(router, [rid])
+    assert results[rid].status == "ok"
+    states = {r.idx: r.state for r in router.replicas}
+    assert states[0] == "drained" and states[1] == "healthy"
+    assert router.replicas[0].condition == "wedged"
+    assert router.stats()["rerouted"] == 1
+    # replay dedup: the caller sees each emitted item exactly once
+    assert streams[rid] == [1, 2, 3, 4, 5, 6]
+
+
+def test_raise_fault_condemns_replica_and_reroutes():
+    router = _router(2, plans={0: FaultPlan.parse("raise@1:message=kaboom")})
+    rid = router.submit(_payload(steps=4))
+    results = router.run_until_complete()
+    assert results[rid].status == "ok"
+    assert router.replicas[0].condition == "wedged"
+    assert "kaboom" in router.replicas[0].reason
+
+
+def test_nan_poisoned_request_fails_with_partials_intact():
+    """The numerics probe marks the replica POISONED; the poisoned request
+    retires ``'failed'`` keeping its clean pre-poison partials, and the
+    replica's *other* in-flight request re-routes and completes."""
+    router = _router(3, plans={0: FaultPlan.parse("nan@2:slot=0")})
+    a = router.submit(_payload(steps=6))                # replica 0, slot 0
+    f1 = router.submit(_payload(steps=1))               # load replicas 1, 2
+    f2 = router.submit(_payload(steps=1))               # so b lands on 0 too
+    b = router.submit(_payload(steps=6))
+    assert router._placement[a] == router._placement[b] == 0
+    results, streams = _drive(router, [a, f1, f2, b])
+    assert results[a].status == "failed"
+    assert results[b].status == "ok"
+    assert router.replicas[0].condition == "poisoned"
+    assert streams[a] == [1, 2] and all_finite(streams[a])   # clean prefix
+    assert streams[b] == [1, 2, 3, 4, 5, 6]                  # re-routed, dedup'd
+
+
+def test_retry_budget_exhaustion_fails_request():
+    """Every replica wedges: the request burns its re-route budget and
+    retires ``'failed'`` instead of bouncing forever."""
+    plans = {i: FaultPlan.parse("wedge@1") for i in range(3)}
+    router = _router(3, plans=plans, max_retries=2, wedge_patience=2)
+    rid = router.submit(_payload(steps=5))
+    results = router.run_until_complete()
+    assert results[rid].status == "failed"
+    assert all(r.state == "drained" for r in router.replicas)
+    assert router.stats()["rerouted"] == 2              # budget, then fail
+
+
+def test_deadline_preserved_across_reroute():
+    """Re-routing recomputes the *remaining* deadline on the shared clock:
+    a request whose deadline passes during the wedge expires instead of
+    getting a fresh budget on the new replica."""
+    router = _router(2, plans={0: FaultPlan.parse("wedge@1")},
+                     wedge_patience=8)
+    rid = router.submit(_payload(steps=4), deadline_s=6.0)
+    results = router.run_until_complete()
+    assert results[rid].status == "expired"             # wedge ate the budget
+
+
+def test_flood_queue_helper_on_router():
+    router = _router(2)
+    rids = flood_queue(router, _payload(1), count=10)
+    assert len(rids) == 10                              # router never raises
+    results = router.run_until_complete()
+    assert len(results) == 10
+
+
+def test_router_slot_invariants_under_faults():
+    """Fleet-wide leak check: after every supervision round, each replica's
+    slot occupancy matches its resident map exactly."""
+    plans = parse_fleet_plan("0=wedge@3,1=nan@4:slot=0")
+    router = _router(3, plans=plans, wedge_patience=2)
+    rids = [router.submit(_payload(steps=4)) for _ in range(9)]
+    for _ in range(60):
+        router.step()
+        for rep in router.replicas:
+            occupied = [s.request_id for s in rep.core.slots
+                        if s.request_id is not None]
+            assert len(occupied) == len(set(occupied))
+            assert set(occupied) == set(rep.core._resident)
+        if not router._outstanding:
+            break
+    assert not router._outstanding
+    for rid in rids:
+        assert router.poll(rid) is not None
+
+
+def test_stats_surface():
+    router = _router(2, plans={0: FaultPlan.parse("wedge@1")},
+                     wedge_patience=2)
+    router.submit(_payload(steps=3))
+    router.run_until_complete()
+    stats = router.stats()
+    assert stats["healthy"] == 1 and stats["drains"] == 1
+    assert [r["state"] for r in stats["replicas"]] == ["drained", "healthy"]
+    assert stats["ok"] == 1 and stats["rerouted"] == 1
+    assert stats["replicas"][0]["condition"] == "wedged"
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-6 chaos acceptance: real LM runner, 3 replicas, 2 faults
+# ---------------------------------------------------------------------------
+
+LM_CFG = ArchConfig(name="t-router", family="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=61,
+                    dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+
+
+def test_chaos_lm_wedge_and_poison_bit_identical():
+    """3-replica LM fleet; replica 0 wedges mid-stream, replica 1
+    NaN-poisons slot 0. Every in-flight request completes: the wedged
+    replica's request re-routes and its outputs are bit-identical to a
+    fault-free single-replica run; the poisoned request retires 'failed'
+    with its clean partial tokens intact."""
+    from repro.serve.runners.lm import LMRunner
+    params = tf.init_params(jax.random.PRNGKey(0), LM_CFG)
+    runner = LMRunner(LM_CFG, params, max_seq=32)
+    prompts = [[1, 2, 3, 4], [7, 5, 3], [9, 9]]
+
+    # fault-free single-replica reference
+    ref_core = EngineCore(runner, EngineConfig(slots=2), clock=StepClock())
+    ref_ids = [ref_core.submit(p, max_new_tokens=6) for p in prompts]
+    ref = ref_core.run_until_complete()
+
+    plans = parse_fleet_plan("0=wedge@4,1=nan@4:slot=0")
+    router = make_router(runner, 3, EngineConfig(slots=2), plans=plans,
+                         wedge_patience=3)
+    a = router.submit(prompts[0], max_new_tokens=6, affinity="a")   # replica 0
+    b = router.submit(prompts[1], max_new_tokens=6, affinity="b")   # replica 1
+    c = router.submit(prompts[2], max_new_tokens=6, affinity="c")   # replica 2
+    assert [router._placement[r] for r in (a, b, c)] == [0, 1, 2]
+
+    results, streams = _drive(router, [a, b, c])
+    assert set(results) == {a, b, c}
+
+    # wedged replica's request: re-routed, bit-identical to fault-free run
+    assert results[a].status == "ok"
+    assert results[a].outputs == ref[ref_ids[0]].outputs
+    assert router.replicas[0].condition == "wedged"
+    assert router.stats()["rerouted"] >= 1
+
+    # poisoned replica's request: retired 'failed', clean partials intact
+    assert results[b].status == "failed"
+    assert router.replicas[1].condition == "poisoned"
+    partials_b = streams[b]
+    assert partials_b and all_finite(partials_b)
+    ref_b_tokens = ref[ref_ids[1]].outputs[len(prompts[1]):]
+    assert partials_b == ref_b_tokens[:len(partials_b)]
+    assert len(partials_b) < len(ref_b_tokens)          # genuinely partial
+
+    # untouched replica: business as usual, and A's dedup'd partial stream
+    # reassembles the full fault-free decode
+    assert results[c].status == "ok"
+    assert results[c].outputs == ref[ref_ids[2]].outputs
+    assert streams[a] == ref[ref_ids[0]].outputs[len(prompts[0]):]
+    assert {r.state for r in router.replicas} == {"drained", "healthy"}

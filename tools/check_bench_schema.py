@@ -7,6 +7,8 @@ Every record must be exactly
 
 (`benchmarks/common.py` normalizes free-form emits into this shape; this
 check keeps the stored file canonical so cross-PR tooling can rely on it).
+`serve_engine_faults` records get an extra pass: each chaos scenario's
+sub-dict must carry its recovery/goodput keys with sane types.
 Stdlib-only — runs in the docs CI job without the jax toolchain.
 
     python tools/check_bench_schema.py [BENCH_results.json ...]
@@ -23,6 +25,42 @@ REQUIRED = {
     "timestamp": (int, float),
 }
 
+# bench_faults records must carry one sub-dict per chaos scenario with its
+# recovery/goodput metrics, so cross-PR tooling can chart them.
+FAULT_SCENARIOS = {
+    "wedge_reroute": ("reroutes", "recovery_steps", "bit_identical",
+                      "router_steps", "goodput_ok_per_step"),
+    "nan_poison": ("failed", "partials_intact", "clean_partial_tokens"),
+    "overload": ("submitted", "ok", "rejected"),
+}
+FAULT_NUMERIC = ("reroutes", "recovery_steps", "router_steps",
+                 "goodput_ok_per_step", "failed", "clean_partial_tokens",
+                 "submitted", "ok", "rejected")
+FAULT_BOOL = ("bit_identical", "partials_intact")
+
+
+def check_faults_record(rec) -> list:
+    problems = []
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict):
+        return problems                 # shape error already reported
+    for scenario, keys in FAULT_SCENARIOS.items():
+        sub = metrics.get(scenario)
+        if not isinstance(sub, dict):
+            problems.append(f"metrics.{scenario} missing or not an object")
+            continue
+        for k in keys:
+            if k not in sub:
+                problems.append(f"metrics.{scenario} missing '{k}'")
+        for k in FAULT_NUMERIC:
+            if k in sub and (isinstance(sub[k], bool)
+                             or not isinstance(sub[k], (int, float))):
+                problems.append(f"metrics.{scenario}.{k} must be numeric")
+        for k in FAULT_BOOL:
+            if k in sub and not isinstance(sub[k], bool):
+                problems.append(f"metrics.{scenario}.{k} must be a bool")
+    return problems
+
 
 def check_record(rec) -> list:
     problems = []
@@ -38,6 +76,8 @@ def check_record(rec) -> list:
     for key in sorted(set(rec) - set(REQUIRED)):
         problems.append(f"unknown top-level key '{key}' "
                         "(file it under config/metrics)")
+    if rec.get("name") == "serve_engine_faults":
+        problems += check_faults_record(rec)
     return problems
 
 
