@@ -1,7 +1,7 @@
 """Unified serving engine benchmark: admission, schedulers, budgets, SLOs,
 and goodput under injected faults.
 
-Five experiments — four through one `EngineCore`, the fifth through the
+Six experiments — five through one `EngineCore`, the sixth through the
 supervised multi-replica `Router`:
 
 * LM — ragged greedy generation with *mixed decode budgets*: run-to-completion
@@ -29,6 +29,11 @@ supervised multi-replica `Router`:
   step-counting engine clock: FIFO misses the interactive class's deadline
   (requests expire behind bulk residents), the `SLOScheduler` meets it by
   admitting tightest-deadline-first.
+* Precision — adaptive per-request fp32/int4 selection (`serve.precision`)
+  vs pinned single-precision fleets on the mixed-sparsity trace: served
+  energy under both the Eq. 3 FPGA model and the analytical per-op model,
+  accuracy proxies vs the fp32 reference, pinned requests asserted
+  never-switched and all outputs asserted bit-identical per precision.
 * Faults — chaos scenarios through a 3-replica router fleet: a wedged
   replica is condemned by the heartbeat and its in-flight request replays
   bit-identically on a healthy replica (recovery latency in router steps);
@@ -381,6 +386,133 @@ def bench_slo(smoke: bool) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Precision: adaptive per-request fp32/int4 vs pinned fleets (serve.precision)
+# ---------------------------------------------------------------------------
+
+def bench_precision(smoke: bool) -> dict:
+    """Adaptive-precision serving vs pinned fp32/int4 fleets on the mixed
+    dense/near-silent SNN trace.
+
+    Three fleets share one pre-warmed fp32+int4 `VariantRegistry` behind a
+    `PrecisionRunner` (``EngineConfig.precision`` = 'fp32' / 'int4' /
+    'adaptive'), each with a fresh `PrecisionController` bound to its
+    sparsity scheduler. Every third request carries
+    ``options['pin_precision']='fp32'`` (the accuracy-pinned class). The
+    trace is served in two waves so the second wave's decisions use the
+    skip-rate EWMAs the first wave taught the scheduler — the
+    quantization->sparsity loop closing online.
+
+    Acceptance (asserted): the adaptive fleet serves the trace at lower
+    mean served energy than the pinned-fp32 fleet under BOTH cost models
+    (paper Eq. 3 and the analytical per-op model — reported side by side
+    per fleet); pinned requests are served fp32 in every fleet; and every
+    request's logits are bit-identical to a plain single-precision
+    `SNNRunner` engine at the precision it was actually served (row
+    independence + single-precision launches). Accuracy proxy: top-1
+    agreement and mean |logit delta| vs the fp32 reference.
+    """
+    import dataclasses
+    from repro.serve.precision import (PrecisionController, PrecisionRunner,
+                                       bind_controller, make_snn_pricer,
+                                       make_snn_variants)
+    from repro.serve.scheduler import make_scheduler
+
+    cfg = vgg9_snn.TINY if smoke else dataclasses.replace(
+        vgg9_snn.TINY, img_hw=32, stages=(16, 24, "MP", 32, 32, "MP"), fc_dim=64)
+    params = init_vgg9(jax.random.PRNGKey(0), cfg)
+    slots = 2 if smoke else 4
+    n_req = 3 * slots
+    payloads, options = _mixed_trace(cfg, n_req)
+    for i, o in enumerate(options):
+        if i % 3 == 0:
+            o["pin_precision"] = "fp32"
+    pinned_idx = [i for i, o in enumerate(options) if "pin_precision" in o]
+
+    # one registry for everything: the variants quantize once and their jit
+    # caches stay warm across fleets, so the comparison times serving only
+    registry = make_snn_variants(cfg, params)
+    registry.prewarm(slots)
+    pricer = make_snn_pricer(cfg)
+
+    # single-precision reference engines: plain SNNRunner variants, no
+    # controller anywhere near them — the bit-identity baseline
+    refs = {}
+    for prec in registry.precisions:
+        core = EngineCore(registry.runner(prec), EngineConfig(slots=slots))
+        res, _ = _drain(core, payloads, options)
+        refs[prec] = [np.asarray(r.outputs) for r in res]
+
+    half = n_req // 2
+    fleets = {}
+    adaptive_summary = None
+    for mode in ("fp32", "int4", "adaptive"):
+        controller = PrecisionController(pricer=pricer, dense_threshold=0.8)
+        runner = PrecisionRunner(registry, controller, mode=mode)
+        scheduler = make_scheduler("sparsity")
+        bind_controller(scheduler, controller)
+        core = EngineCore(runner, EngineConfig(slots=slots,
+                                               scheduler="sparsity",
+                                               precision=mode),
+                          scheduler=scheduler)
+        res1, dt1 = _drain(core, payloads[:half], options[:half])
+        res2, dt2 = _drain(core, payloads[half:], options[half:])
+        results, dt = res1 + res2, dt1 + dt2
+
+        served = [r.stats["precision"] for r in results]
+        # pinned requests never switch, in any fleet or controller state
+        assert all(served[i] == "fp32" for i in pinned_idx), (mode, served)
+        # within a precision, logits are bit-identical to the pinned
+        # single-precision engine that never saw a controller
+        for i, r in enumerate(results):
+            np.testing.assert_array_equal(np.asarray(r.outputs),
+                                          refs[served[i]][i],
+                                          err_msg=f"{mode} req {i}")
+        counts = {p: served.count(p) for p in registry.precisions}
+        fleets[mode] = {
+            "req_per_s": round(n_req / dt, 2),
+            "precision_counts": counts,
+            # both cost models, per fleet, on the same served trace
+            "served_energy_j": float(np.mean(
+                [r.stats["served_energy_j"] for r in results])),
+            "served_energy_analytical_j": float(np.mean(
+                [r.stats["served_energy_analytical_j"] for r in results])),
+            # accuracy proxy vs the fp32 reference logits
+            "top1_agreement_vs_fp32": float(np.mean(
+                [np.argmax(np.asarray(r.outputs)) == np.argmax(refs["fp32"][i])
+                 for i, r in enumerate(results)])),
+            "mean_abs_logit_delta": float(np.mean(
+                [np.abs(np.asarray(r.outputs) - refs["fp32"][i]).mean()
+                 for i, r in enumerate(results)])),
+        }
+        if mode == "adaptive":
+            adaptive_summary = controller.summary()
+            assert counts["int4"] > 0, "adaptive never harvested int4"
+
+    # the acceptance bar: adaptive beats the pinned-fp32 fleet on served
+    # energy under BOTH models while its pinned class stayed fp32-identical
+    win_eq3 = (fleets["fp32"]["served_energy_j"]
+               / fleets["adaptive"]["served_energy_j"])
+    win_ana = (fleets["fp32"]["served_energy_analytical_j"]
+               / fleets["adaptive"]["served_energy_analytical_j"])
+    assert win_eq3 > 1.0 and win_ana > 1.0, fleets
+
+    rec = {"name": "serve_engine_precision", "requests": n_req,
+           "slots": slots, "pinned_fp32": len(pinned_idx),
+           "fleets": fleets,
+           "adaptive": {"energy_win_vs_fp32_eq3": round(win_eq3, 3),
+                        "energy_win_vs_fp32_analytical": round(win_ana, 3),
+                        "pinned_bit_identical": True,
+                        "per_precision_bit_identical": True,
+                        "controller": adaptive_summary}}
+    emit("serve_engine_precision", 0.0,
+         f"served E adaptive={fleets['adaptive']['served_energy_j']:.2e}J "
+         f"fp32={fleets['fp32']['served_energy_j']:.2e}J "
+         f"(win eq3 {win_eq3:.2f}x / analytical {win_ana:.2f}x)",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
+# ---------------------------------------------------------------------------
 # Faults: goodput + recovery latency under injected failures (serve.router)
 # ---------------------------------------------------------------------------
 
@@ -508,9 +640,11 @@ def run(smoke: bool = False) -> dict:
     snn = bench_snn(smoke)
     chunked = bench_chunked_prefill(smoke)
     slo = bench_slo(smoke)
+    precision = bench_precision(smoke)
     faults = bench_faults(smoke)
     record = {"name": "serve_engine", "lm": lm, "snn": snn,
-              "chunked_prefill": chunked, "slo": slo, "faults": faults}
+              "chunked_prefill": chunked, "slo": slo,
+              "precision": precision, "faults": faults}
     print("SERVE_ENGINE_JSON " + json.dumps(record, sort_keys=True))
     append_result(record)
     return record

@@ -1,4 +1,5 @@
-"""Energy/latency models: the paper's FPGA cost model + the TPU roofline model.
+"""Energy/latency models: the paper's FPGA cost model, an analytical
+energy-per-op model, and the TPU roofline model.
 
 FPGA side (reproduction): per-image energy = sum over layers of
 P_dyn(layer) * t(layer) (+ optional static energy), with layer latencies from
@@ -14,7 +15,7 @@ TPU side (target hardware): three-term roofline used by §Roofline —
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -99,6 +100,76 @@ FP32_POWER = FPGAPowerModel(p_per_nc=3.471 * 0.6 / 276, p_mem_per_byte=3.471 * 0
 
 def power_model(precision: str) -> FPGAPowerModel:
     return {"int4": INT4_POWER, "fp32": FP32_POWER}[precision]
+
+
+# ---------------------------------------------------------------------------
+# Analytical energy-per-op model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticalEnergyModel:
+    """Bottom-up per-operation energy accounting, following the framing of
+    "Reconsidering the energy efficiency of SNNs" (arXiv:2409.08290): instead
+    of FPGA-calibrated power x latency (Eq. 3 / `FPGAPowerModel`), count the
+    operations an image actually triggers and price each one —
+
+    * compute: every membrane update is one accumulate (spiking layers have
+      no multiplies; the dense-coded input layer pays full MACs);
+    * memory: every update reads one weight (``wbytes`` bytes at the active
+      precision) and reads+writes the membrane state word from on-chip SRAM.
+
+    The two models deliberately disagree: Eq. 3 bills weight *storage*
+    (per-layer memory power burns for the whole layer latency, spikes or
+    not), this model bills weight *traffic* (silent layers cost nothing).
+    A near-silent input therefore looks relatively cheaper here, and the
+    int4/fp32 ratio differs measurably between the models — which is why
+    the serving-time precision controller (`serve.precision`) prices every
+    choice with both. Per-op constants are Horowitz-style 45 nm figures
+    (ISSCC'14): fp32 add 0.9 pJ / mult 3.7 pJ; integer-datapath accumulate
+    ~0.1 pJ; SRAM ~1.25 pJ per byte touched.
+    """
+
+    e_acc_j: float            # J per accumulate (one membrane update)
+    e_mac_j: float            # J per multiply-accumulate (dense input layer)
+    e_sram_j_per_byte: float  # J per byte of on-chip SRAM traffic
+    wbytes: float             # bytes fetched per weight at this precision
+    state_bytes: float = 8.0  # membrane word read + write per update
+
+
+ANALYTICAL_FP32 = AnalyticalEnergyModel(
+    e_acc_j=0.9e-12, e_mac_j=4.6e-12, e_sram_j_per_byte=1.25e-12, wbytes=4.0)
+ANALYTICAL_INT4 = AnalyticalEnergyModel(
+    e_acc_j=0.1e-12, e_mac_j=0.6e-12, e_sram_j_per_byte=1.25e-12, wbytes=0.5)
+
+
+def analytical_model(precision: str) -> AnalyticalEnergyModel:
+    return {"int4": ANALYTICAL_INT4, "fp32": ANALYTICAL_FP32}[precision]
+
+
+def analytical_energy_per_image(
+    workloads: Sequence[LayerWorkload],
+    precision: str = "int4",
+    model: Optional[AnalyticalEnergyModel] = None,
+) -> Dict[str, float]:
+    """Per-image energy by op counting (no latency term, no static power).
+
+    ``LayerWorkload.work`` is already the membrane-update count (fan x input
+    spikes; the dense input layer's fan alone), so compute energy is
+    ``work * e_op`` and memory energy is ``work * (wbytes + state_bytes) *
+    e_sram`` — weight traffic scales with spikes, which is exactly the
+    sparsity-energy coupling the Eq. 3 storage-power model underweights.
+    """
+    m = model if model is not None else analytical_model(precision)
+    e_comp = e_mem = 0.0
+    for l in workloads:
+        ops = l.work
+        e_comp += ops * (m.e_mac_j if l.kind == "dense_input" else m.e_acc_j)
+        e_mem += ops * (m.wbytes + m.state_bytes) * m.e_sram_j_per_byte
+    return {
+        "energy_j": e_comp + e_mem,
+        "energy_compute_j": e_comp,
+        "energy_memory_j": e_mem,
+    }
 
 
 def energy_per_image(

@@ -16,6 +16,11 @@
     # an injected wedge on replica 0 and a NaN-poison on replica 1:
     PYTHONPATH=src python -m repro.launch.serve --workload lm --replicas 3 \\
         --fault-plan '0=wedge@4,1=nan@6:slot=0'
+
+    # adaptive-precision serving: fp32+int4 variants behind one engine, the
+    # controller picking per request from the sparsity scheduler's EWMAs:
+    PYTHONPATH=src python -m repro.launch.serve --workload snn \\
+        --scheduler sparsity --mixed-trace --precision adaptive
 """
 from __future__ import annotations
 
@@ -36,7 +41,30 @@ from .train import reduce_cfg
 def engine_config(args) -> EngineConfig:
     return EngineConfig(slots=args.slots, admission=args.admission,
                         scheduler=args.scheduler,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        precision=args.precision)
+
+
+def precision_engine(runner_factory, pricer, args):
+    """Precision-capable single engine: fp32+int4 variant registry behind a
+    `PrecisionRunner`, pre-warmed, with the controller bound to the sparsity
+    scheduler's prediction/observation stream when one is in play."""
+    from ..serve.precision import (PrecisionController, PrecisionRunner,
+                                   bind_controller)
+    from ..serve.scheduler import SparsityAwareScheduler, make_scheduler
+
+    registry = runner_factory()
+    controller = PrecisionController(
+        pricer=pricer,
+        slo_tight_s=args.slo_ms / 1000.0 if args.slo_ms > 0 else None)
+    runner = PrecisionRunner(registry, controller, mode=args.precision)
+    registry.prewarm(args.slots)
+    scheduler = make_scheduler(args.scheduler)
+    inner = getattr(scheduler, "inner", scheduler)
+    if isinstance(inner, SparsityAwareScheduler):
+        bind_controller(inner, controller)
+    core = EngineCore(runner, engine_config(args), scheduler=scheduler)
+    return core, controller
 
 
 def build_engine(runner, args):
@@ -68,9 +96,17 @@ def serve_lm(args) -> None:
     cfg = get_arch(args.arch)
     cfg = reduce_cfg(cfg, args).with_(frontend="", n_frontend_tokens=0)
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
-    runner = LMRunner(cfg, params, max_seq=args.seq,
-                      quant_bits=4 if args.int4 else 0)
-    core = build_engine(runner, args)
+    controller = None
+    if args.precision:
+        from ..serve.precision import make_lm_variants
+        core, controller = precision_engine(
+            lambda: make_lm_variants(cfg, params, max_seq=args.seq),
+            None, args)
+        runner = None
+    else:
+        runner = LMRunner(cfg, params, max_seq=args.seq,
+                          quant_bits=4 if args.int4 else 0)
+        core = build_engine(runner, args)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = []
@@ -80,7 +116,9 @@ def serve_lm(args) -> None:
         prompts.append([int(t) for t in
                         jax.random.randint(k2, (length,), 1, cfg.vocab)])
     deadline = args.slo_ms / 1000.0 if args.slo_ms > 0 else None
-    if deadline is not None:
+    if deadline is not None and runner is not None:
+        # (the --precision path pre-warms both variants' bucketed widths via
+        # VariantRegistry.prewarm instead)
         # wall-clock SLOs start at submit(): warm the jit caches first so
         # no XLA compile lands inside a sub-second deadline. Two layers:
         # the same trace (the launch widths this run's prompts produce),
@@ -114,6 +152,8 @@ def serve_lm(args) -> None:
         print(f"req{rid}: prompt={prompts[i]} -> {new} "
               f"status={res.status} stats={dict(res.stats)}")
     print_fleet_report(core)
+    if controller is not None:
+        print(f"precision controller: {controller.summary()}")
 
 
 def serve_snn(args) -> None:
@@ -127,8 +167,15 @@ def serve_snn(args) -> None:
     if args.img_hw:
         cfg = dataclasses.replace(cfg, img_hw=args.img_hw)
     params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
-    runner = SNNRunner(cfg, params, interpret=True)
-    core = build_engine(runner, args)
+    controller = None
+    if args.precision:
+        from ..serve.precision import make_snn_pricer, make_snn_variants
+        core, controller = precision_engine(
+            lambda: make_snn_variants(cfg, params, interpret=True),
+            make_snn_pricer(cfg), args)
+    else:
+        runner = SNNRunner(cfg, params, interpret=True)
+        core = build_engine(runner, args)
 
     if args.data_shard > 1:
         n_dev = len(jax.devices())
@@ -146,13 +193,18 @@ def serve_snn(args) -> None:
     ids = []
     for i, k in enumerate(keys):
         img = jax.random.uniform(k, shape)
+        opts = {}
+        if args.precision and i % 3 == 0:
+            # exercise the never-switch invariant from the CLI: every third
+            # request is accuracy-pinned to fp32 regardless of controller
+            opts["pin_precision"] = "fp32"
         if args.mixed_trace and i % 2 == 0:
             # alternate near-silent requests: the mixed-sparsity trace the
             # sparsity-aware scheduler separates from the dense stream
             img = img * 0.02
-            ids.append(core.submit(img, source="sparse"))
+            ids.append(core.submit(img, source="sparse", **opts))
         else:
-            ids.append(core.submit(img, source="dense"))
+            ids.append(core.submit(img, source="dense", **opts))
     with mesh_ctx:
         results = core.run_until_complete()
     for rid in ids:
@@ -160,9 +212,13 @@ def serve_snn(args) -> None:
         pred = int(res.outputs.argmax())
         skip = {k: round(v, 3) for k, v in res.stats["skip_rate"].items()}
         print(f"req{rid}: class={pred} spikes={res.stats['spike_total']:.0f} "
-              f"skip={skip} energy={res.stats['energy_j']:.3e} J "
-              f"served={res.stats['served_energy_j']:.3e} J")
+              f"skip={skip} precision={res.stats['precision']} "
+              f"energy={res.stats['energy_j']:.3e} J "
+              f"served={res.stats['served_energy_j']:.3e} J "
+              f"(analytical {res.stats['served_energy_analytical_j']:.3e} J)")
     print_fleet_report(core)
+    if controller is not None:
+        print(f"precision controller: {controller.summary()}")
     if hasattr(core, "admission_log"):          # single engine, not a fleet
         print(f"admissions: {core.admission_log}")
 
@@ -180,6 +236,15 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--img-hw", type=int, default=0, help="SNN image size override")
     ap.add_argument("--int4", action="store_true", help="int4-weight numerics")
+    ap.add_argument("--precision", choices=("fp32", "int4", "adaptive"),
+                    default="",
+                    help="precision-controlled serving (serve.precision): "
+                         "both fp32 and int4 variants behind one engine. "
+                         "'fp32'/'int4' pin every unpinned request; "
+                         "'adaptive' picks per request from EWMA sparsity "
+                         "estimates, SLO slack and the accuracy budget. "
+                         "Pair with --scheduler sparsity to close the "
+                         "quantization->sparsity feedback loop online")
     ap.add_argument("--scheduler",
                     choices=("fifo", "sparsity", "slo", "slo:fifo",
                              "slo:sparsity"),
@@ -225,6 +290,13 @@ def main():
         ap.error("--slo-ms is a wall-clock SLO; the replica router runs on "
                  "a deterministic tick clock (drop --replicas/--fault-plan, "
                  "or use deadline-free requests with the fleet)")
+    if args.precision and args.int4:
+        ap.error("--int4 pins numerics at runner construction; with "
+                 "--precision the engine holds both variants (use "
+                 "--precision int4 for a pinned int4 fleet)")
+    if args.precision and (args.replicas > 1 or args.fault_plan):
+        ap.error("--precision builds a single controller-bound engine; "
+                 "drop --replicas/--fault-plan")
 
     if args.workload == "snn":
         serve_snn(args)

@@ -74,7 +74,14 @@ def main():
     ap.add_argument("--compress-grads", action="store_true",
                     help="error-feedback int8 gradient all-reduce over the "
                          "data axis (dist.compression; shard_map train step)")
+    ap.add_argument("--compress-per-channel", action="store_true",
+                    help="with --compress-grads: per-channel (leading-axis) "
+                         "quantization scales instead of one per-tensor "
+                         "scale — tighter for tensors with wide channel "
+                         "magnitude spread")
     args = ap.parse_args()
+    if args.compress_per_channel and not args.compress_grads:
+        ap.error("--compress-per-channel requires --compress-grads")
 
     cfg = get_arch(args.arch)
     if not args.full_size:
@@ -88,7 +95,8 @@ def main():
     if args.compress_grads:
         assert args.batch % n_data == 0, (args.batch, n_data)
         inner = make_train_step(lambda p, b: loss_fn(p, b), opt, lr_fn,
-                                compress_axis="data")
+                                compress_axis="data",
+                                compress_per_channel=args.compress_per_channel)
         step = jax.jit(shard_map_compressed_step(inner, mesh))
     else:
         step = jax.jit(make_train_step(lambda p, b: loss_fn(p, b), opt, lr_fn))

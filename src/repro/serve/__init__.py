@@ -10,6 +10,9 @@ from .api import (EngineConfig, EngineStalled, ModelRunner, PAD_REQUEST_ID,
 from .core import EngineCore, StepClock, all_finite
 from .faults import (Fault, FaultError, FaultPlan, FaultyRunner, TickClock,
                      flood_queue, parse_fleet_plan)
+from .precision import (PrecisionController, PrecisionDecision,
+                        PrecisionRunner, VariantRegistry, bind_controller,
+                        make_lm_variants, make_snn_pricer, make_snn_variants)
 from .router import Router, make_router
 from .scheduler import (FIFOScheduler, Scheduler, SLOScheduler,
                         SparsityAwareScheduler, make_scheduler)
@@ -17,9 +20,11 @@ from .scheduler import (FIFOScheduler, Scheduler, SLOScheduler,
 __all__ = [
     "EngineConfig", "EngineCore", "EngineStalled", "FIFOScheduler", "Fault",
     "FaultError", "FaultPlan", "FaultyRunner", "ModelRunner",
-    "PAD_REQUEST_ID", "QueueFull", "Request", "Result", "Router",
+    "PAD_REQUEST_ID", "PrecisionController", "PrecisionDecision",
+    "PrecisionRunner", "QueueFull", "Request", "Result", "Router",
     "RunnerSession", "SLOScheduler", "Scheduler", "SlotProgress",
     "SparsityAwareScheduler", "StepBudget", "StepClock", "StepReport",
-    "TickClock", "all_finite", "flood_queue", "make_router",
-    "make_scheduler", "parse_fleet_plan",
+    "TickClock", "VariantRegistry", "all_finite", "bind_controller",
+    "flood_queue", "make_lm_variants", "make_router", "make_scheduler",
+    "make_snn_pricer", "make_snn_variants", "parse_fleet_plan",
 ]

@@ -106,6 +106,13 @@ class Result:
                          in — the quantity a sparsity-aware scheduler
                          improves for sparse requests by not co-batching
                          them with dense stragglers.
+    ``energy_analytical_j`` / the same two quantities under the *analytical*
+    ``served_energy_analytical_j`` per-op cost model
+                         (`core.energy.analytical_energy_per_image`):
+                         bottom-up op counting instead of FPGA power x
+                         latency. Reported side by side with the Eq. 3
+                         figures so the two models' disagreement on any
+                         request is measurable.
 
     ``ts_occupancy``     per-layer dict of length-T lists: the fraction of
                          this request's folded matmul rows that carried at
@@ -121,6 +128,11 @@ class Result:
     least one prompt token — ``ceil(prompt_len / chunk)`` under chunked
     prefill), ``ttft_steps`` (session steps from admission through the step
     that emitted the first generated token).
+
+    Both runners additionally stamp the active numerics on every result:
+    ``precision`` ('fp32' or 'int4' — under adaptive serving, the variant
+    this request was *actually* served at) and ``wbytes_per`` (bytes per
+    weight at that precision: 4.0 fp32, 0.5 int4).
 
     status: lifecycle outcome —
 
@@ -260,6 +272,15 @@ class EngineConfig:
                results for NaN/Inf; a poisoned slot is retired with
                ``status='failed'`` (partials preserved) instead of feeding
                the poison onward or corrupting batchmates' steps.
+    precision: weight-numerics policy for precision-capable runners
+               (`serve.precision.PrecisionRunner`): '' (default) leaves the
+               runner's native numerics untouched; 'fp32'/'int4' pin every
+               unpinned request to that variant; 'adaptive' lets the
+               per-request `PrecisionController` choose from EWMA sparsity
+               estimates, SLO slack and the accuracy budget. Requests with
+               ``options['pin_precision']`` are never switched in any mode.
+               Setting this on a runner without ``set_precision`` raises at
+               engine construction.
     """
     slots: int = 8
     max_queue: int = 256
@@ -268,6 +289,7 @@ class EngineConfig:
     prefill_chunk: int = 1
     max_idle_steps: int = 1000
     numerics_screen: bool = True
+    precision: str = ""
 
 
 class QueueFull(RuntimeError):

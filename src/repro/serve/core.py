@@ -147,6 +147,15 @@ class EngineCore:
         assert config.admission in ("continuous", "batch"), config.admission
         self.runner = runner
         self.config = config
+        if config.precision:
+            set_precision = getattr(runner, "set_precision", None)
+            if set_precision is None:
+                raise ValueError(
+                    f"EngineConfig.precision={config.precision!r} needs a "
+                    "precision-capable runner "
+                    "(serve.precision.PrecisionRunner); "
+                    f"{type(runner).__name__} has no set_precision")
+            set_precision(config.precision)
         self.scheduler = scheduler if scheduler is not None else make_scheduler(config.scheduler)
         self.slots = [_Slot(i) for i in range(config.slots)]
         self._queue: collections.deque[Request] = collections.deque()
@@ -541,6 +550,10 @@ class EngineCore:
             "admission": self.config.admission,
             "scheduler": getattr(self.scheduler, "name", type(self.scheduler).__name__),
             "prefill_chunk": self.config.prefill_chunk,
+            # active weight-numerics policy: the config override if set,
+            # else the runner's native precision ('native' if it has none)
+            "precision": self.config.precision
+                         or getattr(self.runner, "precision", "native"),
             # mean fraction of slots holding real work per compute step
             "slot_occupancy": (self._occupied_slot_steps
                                / (steps * self.config.slots) if steps else 0.0),

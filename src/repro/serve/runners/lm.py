@@ -73,6 +73,10 @@ class LMRunner:
         self.cfg = cfg
         self.max_seq = max_seq
         self.prompt_bucket = prompt_bucket
+        self.quant_bits = quant_bits
+        # quantized once at construction: serving never re-quantizes, so a
+        # variant registry can hold one fp32 and one int4 runner over the
+        # same raw params with no per-request quantization cost
         self.params = quantized_lm_params(params, quant_bits) if quant_bits else params
 
         @jax.jit
@@ -130,6 +134,16 @@ class LMRunner:
         self._chunk_step = chunk_step
         self._prefill = prefill
 
+    @property
+    def precision(self) -> str:
+        """Active weight numerics, as recorded on every `Result.stats`."""
+        return f"int{self.quant_bits}" if self.quant_bits else "fp32"
+
+    @property
+    def wbytes_per(self) -> float:
+        """Bytes per weight at the active precision (4.0 fp32, 0.5 int4)."""
+        return self.quant_bits / 8.0 if self.quant_bits else 4.0
+
     # -- ModelRunner protocol ------------------------------------------------
 
     def _padded_len(self, prompt: Sequence[int]) -> int:
@@ -173,6 +187,8 @@ class LMRunner:
                 "prompt_len": len(prompts[i]),
                 "padded_len": plen,
                 "new_tokens": num_tokens,
+                "precision": self.precision,
+                "wbytes_per": self.wbytes_per,
             })
             for i, r in enumerate(batch)
         ]
@@ -229,6 +245,8 @@ class _LMSession:
             "new_tokens": self.budget[i],
             "prefill_chunks": self.prefill_chunks[i],
             "ttft_steps": self.ttft[i],
+            "precision": self.runner.precision,
+            "wbytes_per": self.runner.wbytes_per,
         }, status=status)
 
     def admit(self, slot: int, request: Request) -> Optional[Result]:

@@ -34,7 +34,7 @@ from typing import Dict, Hashable, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.energy import energy_per_image
+from ...core.energy import analytical_energy_per_image, energy_per_image
 from ...core.hybrid import HybridPlan, plan_vgg9_inference
 from ...core.workload import (conv_workload, dense_input_workload, fc_workload)
 from ...dist.context import current_mesh
@@ -226,6 +226,13 @@ class SNNRunner:
             "batch_latency_s": batch_est["latency_s"],
             "batch_real": n_real,
             "served_energy_j": batch_est["energy_j"] / n_real,
+            # the analytical (per-op) model's view of the same share, so
+            # serving records always carry both cost models side by side
+            "served_energy_analytical_j":
+                batch_est["energy_analytical_j"] / n_real,
+            # active numerics: which weight precision served this request
+            "precision": self.precision,
+            "wbytes_per": self.wbytes_per,
         }
 
         results = []
@@ -280,7 +287,17 @@ class SNNRunner:
             weight_bytes.append(d_in * d_out * wbytes_per)
 
         est = energy_per_image(workloads, plan.cores(), weight_bytes, precision)
-        return {"energy_j": est["energy_j"], "latency_s": est["latency_s"]}
+        ana = analytical_energy_per_image(workloads, precision)
+        return {"energy_j": est["energy_j"], "latency_s": est["latency_s"],
+                "energy_analytical_j": ana["energy_j"]}
+
+    @property
+    def precision(self) -> str:
+        return "int4" if self.cfg.quant_bits == 4 else "fp32"
+
+    @property
+    def wbytes_per(self) -> float:
+        return 0.5 if self.cfg.quant_bits == 4 else 4.0
 
 
 class _SNNSession:

@@ -178,6 +178,14 @@ class SparsityAwareScheduler:
         self._global: Optional[float] = None
         self._resident: Dict[int, float] = {}   # request_id -> predicted skip
         self._passes: Dict[int, int] = {}       # request_id -> times passed over
+        # skip-rate observation fan-out: callables (request, result, skip)
+        # invoked for every result that carried a skip rate. The serving-time
+        # precision controller (`serve.precision.bind_controller`) attaches
+        # here to learn realized skip-rate deltas *per precision* — the
+        # scheduler is the one place every completed Result already flows
+        # through, so the quantization->sparsity feedback rides the same
+        # channel the EWMAs do.
+        self.listeners: List[Callable[[Request, Result, float], None]] = []
 
     # -- prediction ---------------------------------------------------------
 
@@ -245,6 +253,8 @@ class SparsityAwareScheduler:
         src = request.options.get("source")
         if src is not None:
             self._by_source[src] = self._ewma(self._by_source.get(src), skip)
+        for listener in self.listeners:
+            listener(request, result, skip)
 
 
 class SLOScheduler:

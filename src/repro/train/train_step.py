@@ -42,6 +42,7 @@ def make_train_step(
     grad_shardings: Any = None,
     grad_dtype: str = "",
     compress_axis: str = "",
+    compress_per_channel: bool = False,
 ) -> Callable[[Dict, Dict], Tuple[Dict, Dict]]:
     """loss_fn(params, batch) -> scalar. Batch leading dim must divide
     accum_steps when accumulation is enabled.
@@ -59,7 +60,10 @@ def make_train_step(
     and per-shard gradients are reduced to the quantized global mean before
     clipping — the loss metric is likewise ``pmean``-ed so every shard
     reports the global value. The residual state is threaded through
-    ``state['grad_err']``."""
+    ``state['grad_err']``. ``compress_per_channel`` selects per-channel
+    (leading-axis) quantization scales instead of one per-tensor scale —
+    tighter scales for tensors whose channel magnitudes vary widely, at the
+    cost of transmitting one scale per row."""
 
     raw_grad_fn = jax.value_and_grad(loss_fn)
 
@@ -100,7 +104,9 @@ def make_train_step(
         new_err = None
         if compress_axis:
             from ..dist.compression import compressed_psum
-            grads, new_err = compressed_psum(grads, state["grad_err"], compress_axis)
+            grads, new_err = compressed_psum(grads, state["grad_err"],
+                                             compress_axis,
+                                             per_channel=compress_per_channel)
             loss = jax.lax.pmean(loss, compress_axis)
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
         lr = lr_fn(state["step"])

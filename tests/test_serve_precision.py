@@ -1,0 +1,390 @@
+"""Adaptive-precision serving invariants (`serve.precision`).
+
+The three ISSUE-7 invariants, property-style where it matters:
+
+(a) requests carrying ``options['pin_precision']`` are NEVER served at
+    another precision, under any controller state, mode, or learned EWMAs;
+(b) outputs within a precision are bit-identical to a pinned
+    single-precision engine (single-precision launches + row independence);
+(c) a precision flip mid-trace never leaks a slot or double-releases one —
+    the per-precision sub-sessions and the engine's slot accounting stay
+    exact through random interleavings of submit/cancel/step.
+
+Engine-mechanics tests run on stub variants (no jax); bit-identity runs the
+real TINY spiking-VGG9 variants through `EngineCore`.
+"""
+import random
+
+import pytest
+
+from repro.serve.api import (PAD_REQUEST_ID, EngineConfig, Request, Result,
+                             SlotProgress, StepBudget, StepReport)
+from repro.serve.core import EngineCore
+from repro.serve.precision import (PRECISIONS, PrecisionController,
+                                   PrecisionRunner, VariantRegistry,
+                                   bind_controller, make_snn_pricer)
+from repro.serve.scheduler import SparsityAwareScheduler
+
+
+# ---------------------------------------------------------------------------
+# Stub variants: one fake runner per precision, results stamp the precision
+# ---------------------------------------------------------------------------
+
+def _stub_result(precision, request):
+    return Result(request.request_id, outputs=[precision],
+                  stats={"precision": precision,
+                         "skip_rate": {"l": request.payload.get("skip", 0.5)}})
+
+
+class StubVariantSession:
+    def __init__(self, runner, slots):
+        self.runner = runner
+        self.req = [None] * slots
+        self.left = [0] * slots
+
+    def admit(self, slot, request):
+        assert self.req[slot] is None
+        steps = request.payload.get("steps", 1)
+        if steps == 0:                         # degenerate: done on arrival
+            return _stub_result(self.runner.precision, request)
+        self.req[slot] = request
+        self.left[slot] = steps
+        return None
+
+    def cancel(self, slot):
+        req = self.req[slot]
+        self.req[slot] = None
+        return Result(req.request_id, None, stats={}, status="cancelled")
+
+    def step(self, budget=StepBudget()):
+        finished, progress = {}, {}
+        for i, r in enumerate(self.req):
+            if r is None:
+                continue
+            self.left[i] -= 1
+            total = r.payload.get("steps", 1)
+            progress[i] = SlotProgress(r.request_id, "decode",
+                                       total - self.left[i], total,
+                                       emitted=(total - self.left[i],))
+            if self.left[i] <= 0:
+                finished[i] = _stub_result(self.runner.precision, r)
+                self.req[i] = None
+        return StepReport(finished=finished, progress=progress,
+                          cost={"units": len(progress)})
+
+
+class StubVariant:
+    """payload: {'key': session key, 'steps': iterations, 'skip': rate}."""
+
+    def __init__(self, precision):
+        self.precision = precision
+
+    def bucket_key(self, request):
+        return request.payload.get("key")
+
+    def session_key(self, request):
+        return request.payload.get("key")
+
+    def filler(self, request):
+        return Request(PAD_REQUEST_ID, dict(request.payload))
+
+    def run(self, batch):
+        return [_stub_result(self.precision, r) for r in batch]
+
+    def open_session(self, slots):
+        return StubVariantSession(self, slots)
+
+
+def _stub_registry():
+    return VariantRegistry({"fp32": StubVariant("fp32"),
+                            "int4": StubVariant("int4")})
+
+
+def _random_controller(rng):
+    c = PrecisionController(
+        default=rng.choice(PRECISIONS),
+        dense_threshold=rng.choice([0.0, 0.3, 0.5, 0.8, 1.0]),
+        slo_tight_s=rng.choice([None, 2000.0]),
+        accuracy_budget=rng.choice([0.0, 0.5, 1.0]),
+        prior=rng.random())
+    # arbitrary learned state: the pin invariant may not depend on it
+    if rng.random() < 0.7:
+        c.skip_ewma.update({"fp32": rng.random(), "int4": rng.random()})
+    return c
+
+
+# ---------------------------------------------------------------------------
+# (a) pinned requests are never switched — any mode, any controller state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_pinned_fp32_never_served_int4(seed):
+    rng = random.Random(seed)
+    runner = PrecisionRunner(_stub_registry(), _random_controller(rng),
+                             mode=rng.choice(["adaptive", "fp32", "int4"]))
+    core = EngineCore(runner, EngineConfig(slots=2))
+    pinned, unpinned = [], []
+    for _ in range(12):
+        opts = {"skip": rng.random()}
+        if rng.random() < 0.5:
+            opts["skip_hint"] = rng.random()
+        if rng.random() < 0.5:
+            opts["pin_precision"] = "fp32"
+        rid = core.submit({"key": "a", "steps": rng.randrange(1, 4)},
+                          deadline_s=rng.choice([None, 1000.0]), **opts)
+        (pinned if "pin_precision" in opts else unpinned).append(rid)
+    results = core.run_until_complete()
+    for rid in pinned:
+        assert results[rid].stats["precision"] == "fp32", (seed, rid)
+    if runner.mode in PRECISIONS:         # pinned modes switch everyone else
+        for rid in unpinned:
+            assert results[rid].stats["precision"] == runner.mode
+
+
+def test_pin_honored_even_in_pinned_int4_mode():
+    runner = PrecisionRunner(_stub_registry(), mode="int4")
+    core = EngineCore(runner, EngineConfig(slots=2, precision="int4"))
+    a = core.submit({"key": "a"}, pin_precision="fp32")
+    b = core.submit({"key": "a"})
+    results = core.run_until_complete()
+    assert results[a].stats["precision"] == "fp32"
+    assert results[b].stats["precision"] == "int4"
+
+
+def test_accuracy_budget_zero_never_downshifts():
+    c = PrecisionController(dense_threshold=1.0, accuracy_budget=0.0)
+    runner = PrecisionRunner(_stub_registry(), c)
+    core = EngineCore(runner, EngineConfig(slots=2))
+    rids = [core.submit({"key": "a", "skip": 0.0}) for _ in range(6)]
+    results = core.run_until_complete()
+    assert all(results[r].stats["precision"] == "fp32" for r in rids)
+    assert all(d.reason == "budget_exhausted" for d in c.decisions)
+
+
+def test_decisions_cached_per_request():
+    c = PrecisionController(dense_threshold=1.0)
+    runner = PrecisionRunner(_stub_registry(), c)
+    req = Request(7, {"key": "a"})
+    first = c.decide(req)
+    # learned state moving after the decision must not re-decide it (a
+    # router replay of the same request id stays bit-identical)
+    c.skip_ewma.update({"fp32": 1.0, "int4": 1.0})
+    assert runner.decide_precision(req) == first
+    assert len(c.decisions) == 1
+
+
+# ---------------------------------------------------------------------------
+# (c) precision flips never leak or double-release slots
+# ---------------------------------------------------------------------------
+
+def _assert_precision_slot_invariants(core):
+    sess = core._session
+    if sess is None:
+        return
+    occupied = {s.index for s in core.slots if s.request_id is not None}
+    owned = {i for i, p in enumerate(sess.owner) if p is not None}
+    assert owned == occupied, "sub-session ownership out of sync with slots"
+    for prec, sub in sess.sub.items():
+        for i, r in enumerate(sub.req):
+            if r is not None:
+                assert sess.owner[i] == prec, \
+                    f"slot {i} occupied in {prec} but owned by {sess.owner[i]}"
+
+
+def test_slot_handoff_across_precisions():
+    """One slot serving fp32 -> int4 -> fp32 back-to-back: each handoff
+    releases exactly once and the next precision admits cleanly."""
+    runner = PrecisionRunner(_stub_registry())
+    core = EngineCore(runner, EngineConfig(slots=1))
+    rids = [core.submit({"key": "a", "steps": 2}, pin_precision=p)
+            for p in ("fp32", "int4", "fp32")]
+    while core.in_flight() or core.stats()["pending"]:
+        core.step()
+        _assert_precision_slot_invariants(core)
+    results = {r: core.poll(r) for r in rids}
+    assert [results[r].stats["precision"] for r in rids] == \
+        ["fp32", "int4", "fp32"]
+    assert core._session.owner == [None]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_precision_interleavings_never_leak_slots(seed):
+    """Property-style: random submit/cancel/step interleavings over a
+    controller whose decisions flip precision mid-trace keep slot ownership
+    exact and every request gets exactly one terminal result."""
+    rng = random.Random(seed)
+    runner = PrecisionRunner(_stub_registry(), _random_controller(rng))
+    core = EngineCore(runner, EngineConfig(slots=3, max_queue=16,
+                                           max_idle_steps=0))
+    submitted, polled, live = set(), {}, []
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.45 and len(live) < 12:
+            opts = {"skip": rng.random()}
+            if rng.random() < 0.3:
+                opts["pin_precision"] = rng.choice(PRECISIONS)
+            rid = core.submit({"key": "a", "steps": rng.randrange(1, 5)},
+                              **opts)
+            submitted.add(rid)
+            live.append(rid)
+        elif op < 0.6 and live:
+            core.cancel(rng.choice(live))
+        else:
+            core.step()
+        for rid in list(live):
+            res = core.poll(rid)
+            if res is not None:
+                assert rid not in polled, "double terminal result"
+                polled[rid] = res
+                live.remove(rid)
+        _assert_precision_slot_invariants(core)
+    results = core.run_until_complete()
+    for rid, res in results.items():
+        assert rid not in polled
+        polled[rid] = res
+    _assert_precision_slot_invariants(core)
+    assert set(polled) == submitted                 # exactly-once, no losses
+    for rid, res in polled.items():
+        if res.status == "ok":
+            assert res.stats["precision"] in PRECISIONS
+
+
+# ---------------------------------------------------------------------------
+# controller <-> scheduler feedback loop
+# ---------------------------------------------------------------------------
+
+def test_bind_controller_learns_per_precision_skip():
+    sched = SparsityAwareScheduler(alpha=1.0)
+    c = PrecisionController(alpha=1.0)
+    bind_controller(sched, c)
+    req = Request(1, {}, {"source": "s"})
+    sched.observe(req, Result(1, None, stats={"precision": "fp32",
+                                              "skip_rate": {"l": 0.2}}))
+    sched.observe(req, Result(2, None, stats={"precision": "int4",
+                                              "skip_rate": {"l": 0.6}}))
+    assert c.skip_ewma == {"fp32": 0.2, "int4": 0.6}
+    assert c.interplay_delta() == pytest.approx(0.4)
+    # predictions route through the scheduler's per-source EWMAs
+    assert c.predict_skip(req) == sched.predict(req)
+    # a result without skip stats (LM) leaves the learned state untouched
+    sched.observe(req, Result(3, None, stats={"precision": "fp32"}))
+    assert c.skip_ewma["fp32"] == 0.2
+
+
+def test_learned_interplay_raises_int4_predicted_skip():
+    pricer_calls = []
+
+    def pricer(precision, activity):
+        pricer_calls.append((precision, activity))
+        return {"eq3_j": activity, "analytical_j": activity}
+
+    c = PrecisionController(pricer=pricer, dense_threshold=1.0)
+    c.skip_ewma.update({"fp32": 0.2, "int4": 0.5})      # learned +0.3 delta
+    c.decide(Request(1, {}, {"skip_hint": 0.4}))
+    # fp32 priced at the predicted activity, int4 at the delta-boosted skip
+    assert ("fp32", pytest.approx(0.6)) in pricer_calls
+    assert ("int4", pytest.approx(0.3)) in pricer_calls
+
+
+def test_snn_pricer_reports_both_models_and_int4_wins():
+    from repro.configs import vgg9_snn
+    price = make_snn_pricer(vgg9_snn.TINY)
+    for activity in (0.1, 0.5, 1.0):
+        fp32 = price("fp32", activity)
+        int4 = price("int4", activity)
+        assert set(fp32) == {"eq3_j", "analytical_j"}
+        assert int4["eq3_j"] < fp32["eq3_j"]
+        assert int4["analytical_j"] < fp32["analytical_j"]
+    # both models are monotone in predicted activity
+    assert price("int4", 0.2)["eq3_j"] < price("int4", 0.8)["eq3_j"]
+    assert (price("int4", 0.2)["analytical_j"]
+            < price("int4", 0.8)["analytical_j"])
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig.precision wiring
+# ---------------------------------------------------------------------------
+
+def test_engine_config_precision_requires_capable_runner():
+    with pytest.raises(ValueError, match="set_precision"):
+        EngineCore(StubVariant("fp32"), EngineConfig(precision="adaptive"))
+
+
+def test_engine_config_precision_sets_runner_mode():
+    runner = PrecisionRunner(_stub_registry(), mode="adaptive")
+    core = EngineCore(runner, EngineConfig(slots=2, precision="int4"))
+    assert runner.mode == "int4"
+    assert core.stats()["precision"] == "int4"
+    rid = core.submit({"key": "a"})
+    assert core.run_until_complete()[rid].stats["precision"] == "int4"
+
+
+def test_mixed_precision_batches_never_reach_run():
+    """bucket_key carries the decided precision, so batch admission can only
+    form single-precision batches; run() enforces it."""
+    runner = PrecisionRunner(_stub_registry())
+    a = Request(1, {"key": "a"}, {"pin_precision": "fp32"})
+    b = Request(2, {"key": "a"}, {"pin_precision": "int4"})
+    assert runner.bucket_key(a) != runner.bucket_key(b)
+    with pytest.raises(AssertionError, match="mixed-precision"):
+        runner.run([a, b])
+    core = EngineCore(runner, EngineConfig(slots=2, admission="batch"))
+    ra = core.submit({"key": "a"}, pin_precision="fp32")
+    rb = core.submit({"key": "a"}, pin_precision="int4")
+    results = core.run_until_complete()
+    assert results[ra].stats["precision"] == "fp32"
+    assert results[rb].stats["precision"] == "int4"
+
+
+# ---------------------------------------------------------------------------
+# (b) bit-identity to a pinned single-precision engine (real SNN variants)
+# ---------------------------------------------------------------------------
+
+def test_snn_outputs_bit_identical_within_precision():
+    import jax
+    import numpy as np
+    from repro.configs import vgg9_snn
+    from repro.models.vgg9 import init_vgg9
+    from repro.serve.precision import make_snn_variants
+    from repro.serve.scheduler import make_scheduler
+
+    cfg = vgg9_snn.TINY
+    params = init_vgg9(jax.random.PRNGKey(0), cfg)
+    registry = make_snn_variants(cfg, params)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    payloads = [jax.random.uniform(k, (cfg.img_hw, cfg.img_hw, cfg.in_ch))
+                for k in keys]
+    payloads[0] = payloads[0] * 0.02                   # one near-silent
+    options = [{"source": "sparse"}, {"source": "dense"},
+               {"source": "dense", "pin_precision": "fp32"},
+               {"source": "dense"}]
+
+    refs = {}
+    for prec in registry.precisions:
+        core = EngineCore(registry.runner(prec), EngineConfig(slots=2))
+        ids = [core.submit(p, **o) for p, o in zip(payloads, options)]
+        res = core.run_until_complete()
+        refs[prec] = [np.asarray(res[i].outputs) for i in ids]
+
+    controller = PrecisionController(pricer=make_snn_pricer(cfg),
+                                     dense_threshold=0.8)
+    runner = PrecisionRunner(registry, controller)
+    scheduler = make_scheduler("sparsity")
+    bind_controller(scheduler, controller)
+    core = EngineCore(runner, EngineConfig(slots=2, scheduler="sparsity",
+                                           precision="adaptive"),
+                      scheduler=scheduler)
+    ids = [core.submit(p, **o) for p, o in zip(payloads, options)]
+    res = core.run_until_complete()
+
+    served = [res[i].stats["precision"] for i in ids]
+    assert served[2] == "fp32"                         # the pinned request
+    assert "int4" in served                            # something harvested
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(np.asarray(res[rid].outputs),
+                                      refs[served[i]][i])
+        assert res[rid].stats["wbytes_per"] == \
+            (0.5 if served[i] == "int4" else 4.0)
+        # both cost models ride on every result
+        assert res[rid].stats["served_energy_analytical_j"] > 0.0
+        assert res[rid].stats["served_energy_j"] > 0.0

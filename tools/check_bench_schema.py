@@ -9,6 +9,9 @@ Every record must be exactly
 check keeps the stored file canonical so cross-PR tooling can rely on it).
 `serve_engine_faults` records get an extra pass: each chaos scenario's
 sub-dict must carry its recovery/goodput keys with sane types.
+`serve_engine_precision` records likewise: every fleet must report both
+cost models' served energy, and the adaptive scenario must carry its
+vs-pinned energy wins and bit-identity flags.
 Stdlib-only — runs in the docs CI job without the jax toolchain.
 
     python tools/check_bench_schema.py [BENCH_results.json ...]
@@ -62,6 +65,60 @@ def check_faults_record(rec) -> list:
     return problems
 
 
+# bench_precision records: every fleet reports both cost models on the same
+# served trace; the adaptive scenario carries its pinned-fleet comparison.
+PRECISION_FLEET_KEYS = ("served_energy_j", "served_energy_analytical_j",
+                        "precision_counts", "top1_agreement_vs_fp32",
+                        "mean_abs_logit_delta")
+PRECISION_ADAPTIVE_NUMERIC = ("energy_win_vs_fp32_eq3",
+                              "energy_win_vs_fp32_analytical")
+PRECISION_ADAPTIVE_BOOL = ("pinned_bit_identical",
+                           "per_precision_bit_identical")
+
+
+def check_precision_record(rec) -> list:
+    problems = []
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict):
+        return problems                 # shape error already reported
+    fleets = metrics.get("fleets")
+    if not isinstance(fleets, dict):
+        problems.append("metrics.fleets missing or not an object")
+    else:
+        for required in ("fp32", "adaptive"):
+            if required not in fleets:
+                problems.append(f"metrics.fleets missing '{required}' — need "
+                                "at least one adaptive-vs-pinned scenario")
+        for fleet, sub in fleets.items():
+            if not isinstance(sub, dict):
+                problems.append(f"metrics.fleets.{fleet} not an object")
+                continue
+            for k in PRECISION_FLEET_KEYS:
+                if k not in sub:
+                    problems.append(f"metrics.fleets.{fleet} missing '{k}'")
+            for k in ("served_energy_j", "served_energy_analytical_j"):
+                if k in sub and (isinstance(sub[k], bool)
+                                 or not isinstance(sub[k], (int, float))):
+                    problems.append(
+                        f"metrics.fleets.{fleet}.{k} must be numeric")
+    adaptive = metrics.get("adaptive")
+    if not isinstance(adaptive, dict):
+        problems.append("metrics.adaptive missing or not an object")
+        return problems
+    for k in PRECISION_ADAPTIVE_NUMERIC:
+        if k not in adaptive:
+            problems.append(f"metrics.adaptive missing '{k}'")
+        elif isinstance(adaptive[k], bool) or not isinstance(
+                adaptive[k], (int, float)):
+            problems.append(f"metrics.adaptive.{k} must be numeric")
+    for k in PRECISION_ADAPTIVE_BOOL:
+        if k not in adaptive:
+            problems.append(f"metrics.adaptive missing '{k}'")
+        elif not isinstance(adaptive[k], bool):
+            problems.append(f"metrics.adaptive.{k} must be a bool")
+    return problems
+
+
 def check_record(rec) -> list:
     problems = []
     if not isinstance(rec, dict):
@@ -78,6 +135,8 @@ def check_record(rec) -> list:
                         "(file it under config/metrics)")
     if rec.get("name") == "serve_engine_faults":
         problems += check_faults_record(rec)
+    if rec.get("name") == "serve_engine_precision":
+        problems += check_precision_record(rec)
     return problems
 
 
