@@ -1,7 +1,7 @@
 """Unified serving engine benchmark: admission, schedulers, budgets, SLOs,
 and goodput under injected faults.
 
-Six experiments — five through one `EngineCore`, the sixth through the
+Seven experiments — six through one `EngineCore`, the seventh through the
 supervised multi-replica `Router`:
 
 * LM — ragged greedy generation with *mixed decode budgets*: run-to-completion
@@ -34,6 +34,11 @@ supervised multi-replica `Router`:
   energy under both the Eq. 3 FPGA model and the analytical per-op model,
   accuracy proxies vs the fp32 reference, pinned requests asserted
   never-switched and all outputs asserted bit-identical per precision.
+* Speculative — n-gram self-drafting verified on the `decode_chunk` seam
+  vs plain one-token decode on the same greedy trace: outputs asserted
+  bit-identical, accept rate > 0 (tiny-model token cycles are prompt-
+  lookup's best case), and decode-tokens-per-step goodput strictly up.
+  The sampled variant asserts seed determinism across engines and runs.
 * Faults — chaos scenarios through a 3-replica router fleet: a wedged
   replica is condemned by the heartbeat and its in-flight request replays
   bit-identically on a healthy replica (recovery latency in router steps);
@@ -513,6 +518,112 @@ def bench_precision(smoke: bool) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Speculative decode: accepted-tokens-per-step goodput vs plain decode
+# ---------------------------------------------------------------------------
+
+def bench_speculative(smoke: bool) -> dict:
+    """Self-speculative decode (n-gram prompt lookup, verified on the
+    `decode_chunk` seam) vs plain one-token decode on the same trace.
+
+    Greedy decode on the tiny bench model falls into token cycles within a
+    few steps — exactly the repetitive structure prompt-lookup drafting
+    exploits — so the speculative engine accepts multi-token prefixes and
+    packs the same decode work into fewer engine steps. The headline is
+    goodput: decode tokens emitted per engine step, plain vs speculative,
+    with outputs asserted bit-identical (speculation may never change a
+    token, only how many one launch emits).
+
+    A second scenario runs the same prompts sampled (temperature/top-p,
+    per-request seeds) through fresh plain and speculative engines twice:
+    sampled speculative output must equal sampled plain output (the
+    per-(seed, index) sampling contract survives verify launches), and a
+    re-run with the same seeds must be identical (seed determinism).
+    """
+    cfg = _lm_cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    slots, tokens = (2, 24) if smoke else (4, 48)
+    spec_k = 4
+    n_req = slots + 1
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab, size=rng.integers(2, 6))]
+               for _ in range(n_req)]
+    options = [{"max_new_tokens": tokens} for _ in range(n_req)]
+
+    plain_runner = LMRunner(cfg, params, max_seq=128)
+    spec_runner = LMRunner(cfg, params, max_seq=128, speculate_k=spec_k)
+
+    # warm both runners' launch-width buckets on throwaway cores
+    for r in (plain_runner, spec_runner):
+        _drain(EngineCore(r, EngineConfig(slots=slots)), prompts[:1],
+               [options[0]])
+
+    modes = {}
+    outputs = {}
+    for label, runner in (("plain", plain_runner), ("speculative", spec_runner)):
+        core = EngineCore(runner, EngineConfig(slots=slots))
+        results, dt = _drain(core, prompts, options)
+        stats = core.stats()
+        modes[label] = {
+            "req_per_s": round(n_req / dt, 2),
+            "steps_run": stats["steps_run"],
+            "decode_tokens": stats["decode_tokens"],
+            "goodput_decode_tok_per_step":
+                round(stats["goodput_decode_tok_per_step"], 4),
+            "drafted_tokens": stats["drafted_tokens"],
+            "accepted_tokens": stats["accepted_tokens"],
+            "goodput_accepted_tok_per_step":
+                round(stats["goodput_accepted_tok_per_step"], 4),
+        }
+        outputs[label] = [r.outputs for r in results]
+        # per-request ledger closes exactly
+        assert all(r.stats["accepted_tokens"] + r.stats["rejected_tokens"]
+                   == r.stats["drafted_tokens"] for r in results)
+
+    # the correctness bar: speculation never changes a token
+    bit_identical = outputs["plain"] == outputs["speculative"]
+    assert bit_identical, "speculative greedy diverged from plain greedy"
+    accept_rate = (modes["speculative"]["accepted_tokens"]
+                   / modes["speculative"]["drafted_tokens"])
+    assert accept_rate > 0, modes
+    # the goodput bar: accepted drafts pack decode into fewer steps
+    goodput_win = (modes["speculative"]["goodput_decode_tok_per_step"]
+                   / modes["plain"]["goodput_decode_tok_per_step"])
+    assert goodput_win > 1.0, modes
+
+    # sampled scenario: determinism across engines and across runs
+    sampled_opts = [{"max_new_tokens": tokens, "temperature": 0.8,
+                     "top_p": 0.95, "seed": 100 + i} for i in range(n_req)]
+    sampled = {}
+    for label, runner in (("plain", plain_runner), ("speculative", spec_runner)):
+        runs = []
+        for _ in range(2):
+            core = EngineCore(runner, EngineConfig(slots=slots))
+            results, _ = _drain(core, prompts, sampled_opts)
+            runs.append([r.outputs for r in results])
+        assert runs[0] == runs[1], f"sampled {label} not seed-deterministic"
+        sampled[label] = runs[0]
+    seed_deterministic = True
+    assert sampled["plain"] == sampled["speculative"], (
+        "sampled speculative diverged from sampled plain")
+
+    rec = {"name": "serve_engine_speculative", "requests": n_req,
+           "slots": slots, "speculate_k": spec_k,
+           "plain": modes["plain"], "speculative": modes["speculative"],
+           "accept_rate": round(accept_rate, 4),
+           "goodput_win": round(goodput_win, 4),
+           "bit_identical": bit_identical,
+           "sampling": {"seed_deterministic": seed_deterministic,
+                        "matches_plain": True}}
+    emit("serve_engine_speculative", 0.0,
+         f"accept_rate={accept_rate:.2f} goodput tok/step "
+         f"plain={modes['plain']['goodput_decode_tok_per_step']} "
+         f"spec={modes['speculative']['goodput_decode_tok_per_step']} "
+         f"({goodput_win:.2f}x)",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
+# ---------------------------------------------------------------------------
 # Faults: goodput + recovery latency under injected failures (serve.router)
 # ---------------------------------------------------------------------------
 
@@ -641,10 +752,12 @@ def run(smoke: bool = False) -> dict:
     chunked = bench_chunked_prefill(smoke)
     slo = bench_slo(smoke)
     precision = bench_precision(smoke)
+    speculative = bench_speculative(smoke)
     faults = bench_faults(smoke)
     record = {"name": "serve_engine", "lm": lm, "snn": snn,
               "chunked_prefill": chunked, "slo": slo,
-              "precision": precision, "faults": faults}
+              "precision": precision, "speculative": speculative,
+              "faults": faults}
     print("SERVE_ENGINE_JSON " + json.dumps(record, sort_keys=True))
     append_result(record)
     return record

@@ -21,6 +21,11 @@
     # controller picking per request from the sparsity scheduler's EWMAs:
     PYTHONPATH=src python -m repro.launch.serve --workload snn \\
         --scheduler sparsity --mixed-trace --precision adaptive
+
+    # speculative decode (n-gram self-drafting, verify K=4 tokens per
+    # launch) with seed-deterministic nucleus sampling:
+    PYTHONPATH=src python -m repro.launch.serve --workload lm \\
+        --speculate 4 --temperature 0.8 --top-p 0.95 --seed 7
 """
 from __future__ import annotations
 
@@ -105,8 +110,14 @@ def serve_lm(args) -> None:
         runner = None
     else:
         runner = LMRunner(cfg, params, max_seq=args.seq,
-                          quant_bits=4 if args.int4 else 0)
+                          quant_bits=4 if args.int4 else 0,
+                          speculate_k=args.speculate)
         core = build_engine(runner, args)
+
+    sampling_opts = {}
+    if args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0:
+        sampling_opts = {"temperature": args.temperature,
+                         "top_k": args.top_k, "top_p": args.top_p}
 
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = []
@@ -142,8 +153,12 @@ def serve_lm(args) -> None:
             sess.admit(0, Request(-1, [1] * plen, {"max_new_tokens": 1}))
             sess.step(StepBudget(chunk=w))
             w *= 2
-    ids = [core.submit(p, max_new_tokens=args.tokens, deadline_s=deadline)
-           for p in prompts]
+    ids = [core.submit(p, max_new_tokens=args.tokens, deadline_s=deadline,
+                       # per-request seed: each request gets its own stream,
+                       # deterministic across runs/replays for a fixed --seed
+                       **(dict(sampling_opts, seed=args.seed + i)
+                          if sampling_opts else {}))
+           for i, p in enumerate(prompts)]
     results = core.run_until_complete()
     for i, rid in enumerate(ids):
         res = results[rid]
@@ -151,6 +166,13 @@ def serve_lm(args) -> None:
         new = res.outputs[len(prompts[i]):] if res.outputs is not None else None
         print(f"req{rid}: prompt={prompts[i]} -> {new} "
               f"status={res.status} stats={dict(res.stats)}")
+    if args.speculate > 0:
+        s = core.stats() if hasattr(core, "stats") else {}
+        if s.get("drafted_tokens"):
+            print(f"speculative: drafted={s['drafted_tokens']} "
+                  f"accepted={s['accepted_tokens']} "
+                  f"accept_rate={s['accept_rate']:.3f} "
+                  f"goodput={s['goodput_decode_tok_per_step']:.2f} tok/step")
     print_fleet_report(core)
     if controller is not None:
         print(f"precision controller: {controller.summary()}")
@@ -274,6 +296,17 @@ def main():
                          "'0=wedge@4,1=nan@6:slot=0' (kinds: wedge, slow, "
                          "raise, nan, flood). Implies the router path even "
                          "with --replicas 1")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="LM: speculative decode — draft up to K tokens per "
+                         "pure-decode row via n-gram prompt lookup and "
+                         "verify them in one launch (outputs bit-identical "
+                         "to plain decode; needs --admission continuous)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="LM sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="LM: sample from the k highest logits (0 = all)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="LM: nucleus sampling mass (1.0 = all)")
     ap.add_argument("--mixed-trace", action="store_true",
                     help="SNN: alternate near-silent and dense requests")
     ap.add_argument("--data-shard", type=int, default=0,
@@ -297,6 +330,16 @@ def main():
     if args.precision and (args.replicas > 1 or args.fault_plan):
         ap.error("--precision builds a single controller-bound engine; "
                  "drop --replicas/--fault-plan")
+    sampling = args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
+    if (args.speculate or sampling) and args.workload != "lm":
+        ap.error("--speculate/--temperature/--top-k/--top-p are LM-only")
+    if (args.speculate or sampling) and args.admission == "batch":
+        ap.error("--speculate and sampling need --admission continuous "
+                 "(the run-to-completion batch path is greedy-only)")
+    if args.speculate and args.precision:
+        ap.error("--speculate drafts against one resident KV cache; the "
+                 "--precision variant registry swaps runners per request "
+                 "(drop one of the two)")
 
     if args.workload == "snn":
         serve_snn(args)

@@ -376,7 +376,8 @@ def decode_step(params: Dict, cache: Dict, batch: Dict, pos: jax.Array,
 
 def decode_chunk(params: Dict, cache: Dict, tokens: jax.Array, pos0: jax.Array,
                  take: jax.Array, cfg: ArchConfig,
-                 active: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+                 active: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array, Dict]:
     """Chunk-masked multi-token decode: per-row ragged token chunks.
 
     tokens: int32 [B, C] — row i consumes ``tokens[i, :take[i]]`` at
@@ -385,15 +386,19 @@ def decode_chunk(params: Dict, cache: Dict, tokens: jax.Array, pos0: jax.Array,
     ignored), so rows with different chunk lengths share one launch. This
     is the serving engine's chunked prefill: a joining prompt consumes a
     scheduler-sized chunk of prompt tokens in the same call its slot-mates
-    decode their single token in (their ``take`` is 1).
+    decode their single token in (their ``take`` is 1). It is also the
+    speculative-decode verify primitive: a drafting row feeds its pending
+    token plus K drafted tokens and reads K+1 next-token distributions
+    back from one launch (`serve.speculative`).
 
     Semantically this IS C sequential `decode_step` calls with per-column
     active masks, fused into one jitted scan — bit-identity with the
     token-by-token path holds by construction for every chunk size.
 
-    Returns (picks [B, C] int32 greedy argmax per consumed column — rows
-    read their own entry at column ``take[i] - 1``; masked columns carry
-    garbage — and the updated cache).
+    Returns (picks [B, C] int32 greedy argmax per consumed column,
+    logits [B, C, V] the full next-token distribution at every consumed
+    column — rows read their own entries at columns ``< take[i]``; masked
+    columns carry garbage — and the updated cache).
     """
     b, c = tokens.shape
     pos0 = jnp.asarray(pos0, jnp.int32)
@@ -405,11 +410,51 @@ def decode_chunk(params: Dict, cache: Dict, tokens: jax.Array, pos0: jax.Array,
         act = base & (t < take)
         logits, cache = decode_step(params, cache, {"tokens": tok[:, None]},
                                     pos0 + t, cfg, active=act)
-        return cache, jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        last = logits[:, -1]                     # [B, V]
+        return cache, (jnp.argmax(last, axis=-1).astype(jnp.int32), last)
 
-    cache, picks = jax.lax.scan(
+    cache, (picks, logits) = jax.lax.scan(
         body, cache, (jnp.arange(c, dtype=jnp.int32), tokens.T))
-    return picks.T, cache                        # [B, C]
+    # scan stacks per-column outputs on the leading axis: [C, B] / [C, B, V]
+    return picks.T, jnp.swapaxes(logits, 0, 1), cache
+
+
+def rollback_cache_rows(cache: Dict, keep_len: jax.Array,
+                        rows: jax.Array) -> Dict:
+    """Zero KV-cache entries at positions ``>= keep_len[b]`` for masked rows.
+
+    The speculative-decode rollback: a verify launch writes K+1 KV entries
+    per drafting row, but only the accepted prefix belongs to the real
+    sequence. Zeroing the rejected suffix restores the exact state a
+    never-speculated session would hold (`init_kv_cache` zeros; non-windowed
+    attention writes at slot == pos and masks ``idx <= pos``, so absolute
+    positions index the cache directly).
+
+    Only valid for architectures whose blocks all carry position-indexed KV
+    caches — plain attention (``attn_mlp`` / ``attn_moe``). Recurrent blocks
+    (rglru/mlstm/slstm) hold cumulative state and ``local_attn`` uses a ring
+    buffer; neither can be rolled back positionally (`serve.runners.lm`
+    gates speculation off for them).
+
+    keep_len: int32 [B] — first position to zero, per row.
+    rows:     bool [B] — rows to roll back; False rows are untouched.
+    """
+    keep_len = jnp.asarray(keep_len, jnp.int32)
+    rows = jnp.asarray(rows, bool)
+
+    def cut(batch_axis):
+        def f(leaf):
+            seq = leaf.shape[batch_axis + 1]
+            idx = jnp.arange(seq, dtype=jnp.int32)
+            keep = (~rows[:, None]) | (idx[None, :] < keep_len[:, None])
+            shape = [1] * leaf.ndim
+            shape[batch_axis] = keep_len.shape[0]
+            shape[batch_axis + 1] = seq
+            return jnp.where(keep.reshape(shape), leaf, jnp.zeros_like(leaf))
+        return f
+
+    return {"periods": jax.tree.map(cut(1), cache["periods"]),
+            "tail": jax.tree.map(cut(0), cache["tail"])}
 
 
 def prefill_step(params: Dict, batch: Dict, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:

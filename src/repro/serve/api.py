@@ -30,7 +30,15 @@ class Request:
 
     payload is workload-defined: a token-id list for the LM runner, an
     [H, W, C] image for the SNN runner. options carry per-request knobs the
-    runner understands (e.g. ``max_new_tokens`` for the LM).
+    runner understands: ``max_new_tokens`` for the LM, plus the sampling
+    keys the continuous-admission LM runner parses into
+    `serve.sampling.SamplingParams` — ``temperature`` (0.0 = greedy),
+    ``top_k``, ``top_p``, ``seed`` (per-request PRNG seed; the token at
+    generation index i is a pure function of (seed, i, logits), so router
+    replay and engine restarts reproduce the stream bit-identically) and
+    ``logprobs`` (surface per-token logprobs even for greedy requests).
+    Options ride the frozen Request through queue, drain and re-route
+    untouched, which is what makes replay determinism possible.
 
     deadline_s/priority are scheduler-facing lifecycle knobs (first-class,
     not options, because the engine itself acts on them):
@@ -127,7 +135,12 @@ class Result:
     (decode budget), ``prefill_chunks`` (session steps that consumed at
     least one prompt token — ``ceil(prompt_len / chunk)`` under chunked
     prefill), ``ttft_steps`` (session steps from admission through the step
-    that emitted the first generated token).
+    that emitted the first generated token). Speculative-decode accounting
+    (always present under continuous admission): ``drafted_tokens`` /
+    ``accepted_tokens`` / ``rejected_tokens``, with accepted + rejected ==
+    drafted exactly. Requests that opted into logprob tracking
+    (``temperature > 0`` or ``logprobs: True``) also carry ``logprobs``:
+    one ``log_softmax(raw logits)[token]`` per generated token.
 
     Both runners additionally stamp the active numerics on every result:
     ``precision`` ('fp32' or 'int4' — under adaptive serving, the variant
@@ -222,9 +235,16 @@ class StepReport:
               ``decode_tokens`` the tokens *emitted* — on the step that
               consumes a row's last prompt token the same forward pass
               also emits its first decode token, so ``prompt_tokens +
-              decode_tokens`` may exceed ``units``. Schedulers fold these,
-              with the engine-measured wall seconds, into their cost
-              models (`SLOScheduler`).
+              decode_tokens`` may exceed ``units``. Under speculative
+              decode the LM also reports ``drafted_tokens`` /
+              ``accepted_tokens`` for the step, and ``decode_tokens``
+              counts every emitted token (accepted draft prefix + the
+              corrected/bonus token per speculating row) — so
+              decode-tokens-per-step is the goodput headline speculation
+              moves, while ``units`` still prices the forward work spent
+              to get them. Schedulers fold these, with the
+              engine-measured wall seconds, into their cost models
+              (`SLOScheduler`).
     """
     finished: Mapping[int, Result] = dataclasses.field(default_factory=dict)
     progress: Mapping[int, SlotProgress] = dataclasses.field(default_factory=dict)

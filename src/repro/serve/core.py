@@ -189,6 +189,8 @@ class EngineCore:
         self._occupied_slot_steps = 0  # sum over steps of occupied slots
         self._decode_tokens = 0        # LM decode tokens emitted (goodput)
         self._work_units = 0           # budget units consumed (StepReport.cost)
+        self._drafted_tokens = 0       # speculative drafts verified
+        self._accepted_tokens = 0      # drafts accepted (free decode tokens)
         #: [(step_index, [request_ids admitted])] — the scheduler's decisions,
         #: in order; tests and benchmarks read batch composition off this.
         self.admission_log: List[Tuple[int, List[int]]] = []
@@ -442,6 +444,8 @@ class EngineCore:
         self._occupied_slot_steps += len(occupied)
         self._decode_tokens += int(report.cost.get("decode_tokens", 0))
         self._work_units += int(report.cost.get("units", 0))
+        self._drafted_tokens += int(report.cost.get("drafted_tokens", 0))
+        self._accepted_tokens += int(report.cost.get("accepted_tokens", 0))
 
         # numerics probe: a slot whose step outputs carry NaN/Inf is retired
         # with status='failed' before the poison can stream to the caller or
@@ -567,4 +571,14 @@ class EngineCore:
             "decode_tokens": self._decode_tokens,
             "goodput_decode_tok_per_step": (self._decode_tokens / steps
                                             if steps else 0.0),
+            # speculative decode: drafts verified, drafts accepted, and the
+            # fraction accepted — accepted tokens are the decode tokens a
+            # step emitted beyond one-per-slot, i.e. exactly the goodput
+            # speculation buys (zero everywhere when speculation is off)
+            "drafted_tokens": self._drafted_tokens,
+            "accepted_tokens": self._accepted_tokens,
+            "accept_rate": (self._accepted_tokens / self._drafted_tokens
+                            if self._drafted_tokens else 0.0),
+            "goodput_accepted_tok_per_step": (self._accepted_tokens / steps
+                                              if steps else 0.0),
         }

@@ -37,6 +37,27 @@ row-independent and chunking only regroups the same masked per-token
 updates, a request admitted mid-stream sees exactly the numerics a solo
 run would give it — bit-identical outputs for every chunk size, which the
 tests assert.
+
+Speculative decode (``speculate_k > 0``) reuses the same chunk launch as
+the *verify* primitive: a pure-decode row whose proposer
+(`serve.speculative`, n-gram prompt lookup by default) offers K draft
+tokens feeds ``[pending, d1..dK]`` at ``take == K+1`` and reads K+1
+next-token selections back from the one launch its slot-mates prefill and
+plain-decode in; the longest draft prefix matching the model's own
+selections is accepted plus the corrected token at the first mismatch, the
+row's position advances by accepted+1, and KV entries written at rejected
+columns are zeroed (`transformer.rollback_cache_rows`) so the cache stays
+bit-identical to a never-speculated session. Speculation is gated to
+attention-only architectures: recurrent blocks hold cumulative state and
+local attention a ring buffer, neither of which rolls back positionally.
+
+Token selection is greedy argmax by default, or the per-request sampling
+layer (`serve.sampling`: temperature/top-k/top-p with a per-request seed,
+deterministic per (seed, generation index) so a position samples the same
+token inside a verify launch as it would one-token-at-a-time). Drafts only
+change how many positions one launch advances — never which tokens come
+out: speculative output is bit-identical to plain decode for greedy and
+sampled requests alike.
 """
 from __future__ import annotations
 
@@ -51,8 +72,15 @@ from ...configs.base import ArchConfig
 from ...core.quant import fake_quant
 from ...core.tiling import round_up
 from ...models import transformer as tf
+from .. import sampling as sampling_mod
 from ..api import (PAD_REQUEST_ID, Request, Result, SlotProgress, StepBudget,
                    StepReport)
+from ..sampling import SamplingParams
+from ..speculative import NGramProposer, Proposer
+
+#: block kinds whose decode cache is a position-indexed KV cache — the only
+#: ones speculative rollback can restore exactly (see module docstring)
+_SPEC_SAFE_KINDS = ("attn_mlp", "attn_moe")
 
 
 def quantized_lm_params(params, bits: int):
@@ -69,11 +97,26 @@ class LMRunner:
     """Greedy batched generation over the unified LM (`ModelRunner`)."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_seq: int = 512,
-                 quant_bits: int = 0, prompt_bucket: int = 8):
+                 quant_bits: int = 0, prompt_bucket: int = 8,
+                 speculate_k: int = 0, proposer: Optional[Proposer] = None):
         self.cfg = cfg
         self.max_seq = max_seq
         self.prompt_bucket = prompt_bucket
         self.quant_bits = quant_bits
+        # speculative decode: sessions draft up to speculate_k tokens per
+        # pure-decode row and verify them in the chunk launch. Only safe
+        # when every block's cache is position-indexed KV (rollback zeroes
+        # the rejected positions exactly; recurrent/ring-buffer state has
+        # no positional undo).
+        self.speculate_k = int(speculate_k)
+        if self.speculate_k:
+            unsupported = (set(cfg.pattern) | set(cfg.tail)) - set(_SPEC_SAFE_KINDS)
+            assert not unsupported, (
+                f"speculate_k={speculate_k} needs position-indexed KV "
+                f"rollback; block kinds {sorted(unsupported)} hold "
+                f"recurrent or ring-buffer state that cannot roll back")
+        self.proposer: Proposer = proposer if proposer is not None \
+            else NGramProposer()
         # quantized once at construction: serving never re-quantizes, so a
         # variant registry can hold one fp32 and one int4 runner over the
         # same raw params with no per-request quantization cost
@@ -91,19 +134,31 @@ class LMRunner:
         def masked_step(params, cache, tokens, pos_vec, active):
             """One mixed prefill/decode step for a live session: every row
             consumes its own token at its own position; active=False rows
-            (free slots) freeze their caches."""
+            (free slots) freeze their caches. Returns greedy picks [B] plus
+            the full next-token logits [B, V] — the device keeps both; the
+            session only transfers logits when a row samples or tracks
+            logprobs, so the pure-greedy path pays nothing for them."""
             logits, cache = tf.decode_step(params, cache, {"tokens": tokens},
                                            pos_vec, cfg, active=active)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return nxt, cache                     # [B] greedy picks
+            last = logits[:, -1]
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return nxt, last, cache
 
         @jax.jit
         def chunk_step(params, cache, tokens, pos0, take, active):
             """One chunked mixed prefill/decode step: every row consumes its
-            own ragged token chunk at its own positions (decode rows take 1;
-            see `transformer.decode_chunk`). Greedy picks per column."""
+            own ragged token chunk at its own positions (decode rows take 1,
+            speculative rows 1 + draft length; see `transformer.decode_chunk`).
+            Greedy picks and logits per column."""
             return tf.decode_chunk(params, cache, tokens, pos0, take, cfg,
                                    active=active)
+
+        @jax.jit
+        def rollback(cache, keep_len, rows):
+            """Zero KV entries at positions >= keep_len for the masked rows:
+            the speculative-decode rollback (`transformer.rollback_cache_rows`).
+            One launch per step, only when a draft was rejected."""
+            return tf.rollback_cache_rows(cache, keep_len, rows)
 
         @jax.jit
         def prefill(params, cache, toks, lens):
@@ -132,6 +187,7 @@ class LMRunner:
         self._step = step
         self._masked_step = masked_step
         self._chunk_step = chunk_step
+        self._rollback = rollback
         self._prefill = prefill
 
     @property
@@ -159,6 +215,13 @@ class LMRunner:
         return Request(PAD_REQUEST_ID, [], dict(request.options))
 
     def run(self, batch: Sequence[Request]) -> List[Result]:
+        for r in batch:
+            bad = sorted(set(r.options) & set(SamplingParams.KEYS))
+            if not r.is_pad and bad:
+                raise ValueError(
+                    f"request {r.request_id} carries sampling options {bad}; "
+                    "the run-to-completion batch path is greedy-only — use "
+                    "EngineConfig.admission='continuous'")
         prompts = [list(r.payload) for r in batch]
         num_tokens = int(batch[0].options.get("max_new_tokens", 0))
         plen = self._padded_len(max(prompts, key=len) if prompts else [0])
@@ -228,6 +291,15 @@ class _LMSession:
         self.prefill_chunks = [0] * slots  # steps that consumed prompt tokens
         self.steps_in = [0] * slots   # steps since admission
         self.ttft = [0] * slots       # steps through the first emitted token
+        # per-slot sampling config (None = pure greedy, zero-cost default)
+        # and the logprob trace for slots that track it
+        self.sampling: List[Optional[SamplingParams]] = [None] * slots
+        self.logprobs: List[List[float]] = [[] for _ in range(slots)]
+        # speculative-decode accounting: accepted + rejected == drafted,
+        # per slot (the property the test battery sums exactly)
+        self.drafted = [0] * slots
+        self.accepted = [0] * slots
+        self.rejected = [0] * slots
         self._stale: set = set()      # slots whose past occupant touched state
 
     def _result(self, i: int, status: str = "ok") -> Result:
@@ -239,7 +311,7 @@ class _LMSession:
         # padding ever leaked into the stream) and the slot consumed no
         # token position past its own prompt + emissions.
         assert self.out[i][:plen] == self.prompt[i], (self.out[i], self.prompt[i])
-        return Result(req.request_id, self.out[i], stats={
+        stats = {
             "prompt_len": plen,
             "padded_len": plen,
             "new_tokens": self.budget[i],
@@ -247,7 +319,19 @@ class _LMSession:
             "ttft_steps": self.ttft[i],
             "precision": self.runner.precision,
             "wbytes_per": self.runner.wbytes_per,
-        }, status=status)
+            # speculative accounting (all zero when speculation is off):
+            # drafted == accepted + rejected by construction
+            "drafted_tokens": self.drafted[i],
+            "accepted_tokens": self.accepted[i],
+            "rejected_tokens": self.rejected[i],
+        }
+        sp = self.sampling[i]
+        if sp is not None and sp.track_logprobs:
+            # one raw-distribution log_softmax value per generated token,
+            # in emission order (`serve.sampling` — the empty-prompt argmax
+            # placeholder is forced, recorded as logprob 0.0)
+            stats["logprobs"] = list(self.logprobs[i])
+        return Result(req.request_id, self.out[i], stats=stats, status=status)
 
     def admit(self, slot: int, request: Request) -> Optional[Result]:
         assert self.req[slot] is None, f"slot {slot} busy"
@@ -264,6 +348,11 @@ class _LMSession:
         self.prefill_chunks[slot] = 0
         self.steps_in[slot] = 0
         self.ttft[slot] = 0
+        self.sampling[slot] = SamplingParams.from_options(request.options)
+        self.logprobs[slot] = []
+        self.drafted[slot] = 0
+        self.accepted[slot] = 0
+        self.rejected[slot] = 0
         if budget == 0:               # nothing to generate: done on arrival
             res = self._result(slot)
             self.req[slot] = None
@@ -274,9 +363,13 @@ class _LMSession:
             # batch-path parity: an empty prompt's first "generated" token is
             # the argmax placeholder 0 the scan prefill leaves behind (its
             # rows are never active, first0 is zeros); decode continues from
-            # it at position 0
+            # it at position 0. The placeholder is forced, not selected, so
+            # a logprob-tracking slot records 0.0 (probability one) for it.
             self.out[slot].append(0)
             self.next_tok[slot] = 0
+            sp = self.sampling[slot]
+            if sp is not None and sp.track_logprobs:
+                self.logprobs[slot].append(0.0)
             if budget <= 1:
                 res = self._result(slot)
                 self.req[slot] = None
@@ -294,15 +387,42 @@ class _LMSession:
         self._stale.add(slot)         # its prefill/decode advanced the state
         return res
 
-    def _takes(self, occupied: List[int], budget: StepBudget) -> Dict[int, int]:
-        """Tokens each occupied slot consumes this step: decode slots take
-        exactly one; prefilling slots take up to their per-slot allowance
-        (never past their own prompt end). A total-units cap trims the
-        prefill extras in slot order, never below one token per slot."""
+    def _draft_k(self, i: int) -> int:
+        """Draft allowance for slot ``i`` this step: 0 unless the slot is a
+        pure-decode row (position past its prompt end — crossing rows still
+        owe a prompt token) with at least two budgeted tokens left. The
+        clamp to ``remaining - 1`` keeps every verify launch inside both the
+        decode budget (it emits at most accepted+1 <= k+1 <= remaining
+        tokens) and ``max_seq`` (admit() bounds prompt+budget)."""
+        if self.runner.speculate_k <= 0 or self.pos[i] < len(self.prompt[i]):
+            return 0
+        remaining = self.budget[i] - (len(self.out[i]) - len(self.prompt[i]))
+        return max(0, min(self.runner.speculate_k, remaining - 1))
+
+    def _plan(self, occupied: List[int], budget: StepBudget
+              ) -> "tuple[Dict[int, int], Dict[int, List[int]]]":
+        """Tokens each occupied slot consumes this step, plus draft
+        proposals: decode slots take one, speculative decode slots one plus
+        their draft, prefilling slots up to their per-slot allowance (never
+        past their own prompt end). A total-units cap trims the extras —
+        prefill chunk and draft tail alike — in slot order, never below one
+        token per slot."""
         takes: Dict[int, int] = {}
+        drafts: Dict[int, List[int]] = {}
         for i in occupied:
             remaining = len(self.prompt[i]) - self.pos[i]
-            takes[i] = min(budget.for_slot(i), remaining) if remaining > 1 else 1
+            if remaining > 1:
+                takes[i] = min(budget.for_slot(i), remaining)
+                continue
+            takes[i] = 1
+            k = self._draft_k(i)
+            if k > 0:
+                draft = [int(t) for t in
+                         self.runner.proposer.propose(self.out[i], k)][:k]
+                assert all(0 <= t < self.runner.cfg.vocab for t in draft), draft
+                if draft:
+                    drafts[i] = draft
+                    takes[i] = 1 + len(draft)
         if budget.units is not None:
             total = sum(takes.values())
             cap = max(int(budget.units), len(occupied))
@@ -312,7 +432,11 @@ class _LMSession:
                 cut = min(takes[i] - 1, total - cap)
                 takes[i] -= cut
                 total -= cut
-        return takes
+                if i in drafts:
+                    drafts[i] = drafts[i][:takes[i] - 1]
+                    if not drafts[i]:
+                        del drafts[i]
+        return takes, drafts
 
     def step(self, budget: StepBudget = StepBudget()) -> StepReport:
         occupied = [i for i in range(self.slots) if self.req[i] is not None]
@@ -330,7 +454,7 @@ class _LMSession:
                                              jnp.asarray(keep))
             self._stale.difference_update(stale)
 
-        takes = self._takes(occupied, budget)
+        takes, drafts = self._plan(occupied, budget)
         width = max(takes.values())
         if width > 1:
             # pow2-bucket the launch width: every distinct width is its own
@@ -341,58 +465,134 @@ class _LMSession:
             width = 1 << (width - 1).bit_length()
         pos_vec = jnp.asarray(self.pos, jnp.int32)
         active = jnp.asarray([self.req[i] is not None for i in range(self.slots)])
-        if width == 1:
+        chunked = width > 1
+        if not chunked:
             # all rows take one token: the PR-3 single-token launch
             tokens = jnp.asarray(
                 [[self.next_tok[i]] for i in range(self.slots)], jnp.int32)
-            nxt, self.cache = self.runner._masked_step(
+            picks_dev, logits_dev, self.cache = self.runner._masked_step(
                 self.runner.params, self.cache, tokens, pos_vec, active)
-            picks_dev, cols = nxt, {i: 0 for i in occupied}
         else:
             # ragged chunk: row i consumes tokens[i, :take[i]] — its own
             # prompt slice while prefilling, its pending token at column 0
-            # while decoding (take == 1; later columns masked)
+            # (plus its draft at columns 1..k while speculating) while
+            # decoding; later columns masked
             buf = np.zeros((self.slots, width), np.int32)
             take_vec = np.zeros(self.slots, np.int32)
             for i in occupied:
                 t = takes[i]
                 take_vec[i] = t
                 p, prompt = self.pos[i], self.prompt[i]
+                d = drafts.get(i)
                 for j in range(t):
-                    buf[i, j] = prompt[p + j] if p + j < len(prompt) \
-                        else self.next_tok[i]
-            picks_dev, self.cache = self.runner._chunk_step(
+                    if p + j < len(prompt):
+                        buf[i, j] = prompt[p + j]
+                    elif d is not None and j > 0:
+                        buf[i, j] = d[j - 1]
+                    else:
+                        buf[i, j] = self.next_tok[i]
+            picks_dev, logits_dev, self.cache = self.runner._chunk_step(
                 self.runner.params, self.cache, jnp.asarray(buf), pos_vec,
                 jnp.asarray(take_vec), active)
-            cols = {i: takes[i] - 1 for i in occupied}
+
+        # device->host transfers are lazy: prefill-only steps fetch nothing,
+        # pure-greedy steps fetch picks only — logits move to host only when
+        # some row samples or tracks logprobs this step
+        fetched: Dict[str, Optional[np.ndarray]] = {"picks": None, "logits": None}
+
+        def pick_at(row: int, col: int) -> int:
+            if fetched["picks"] is None:
+                fetched["picks"] = np.asarray(picks_dev)
+            arr = fetched["picks"]
+            return int(arr[row, col] if chunked else arr[row])
+
+        def logits_at(row: int, col: int) -> np.ndarray:
+            if fetched["logits"] is None:
+                fetched["logits"] = np.asarray(logits_dev)
+            arr = fetched["logits"]
+            return arr[row, col] if chunked else arr[row]
+
+        def select(row: int, col: int, index: int):
+            """(token, logprob|None) the model selects at launch column
+            ``col`` for generation index ``index`` of slot ``row`` — greedy
+            argmax straight off the device picks, or the seed-deterministic
+            sampling layer. The speculative accept test compares draft
+            tokens against exactly these selections, so acceptance can
+            never change the emitted stream."""
+            sp = self.sampling[row]
+            if sp is None or not sp.track_logprobs:
+                return pick_at(row, col), None
+            if sp.greedy:            # logprobs requested on the greedy path
+                tok = pick_at(row, col)
+                return tok, float(
+                    sampling_mod.log_softmax(logits_at(row, col))[tok])
+            return sampling_mod.sample(logits_at(row, col), sp, index)
 
         finished: Dict[int, Result] = {}
         progress: Dict[int, SlotProgress] = {}
-        picks = None                  # fetched lazily: prefill-only steps skip it
         prompt_toks = decode_toks = 0
+        drafted_toks = accepted_toks = 0
+        rollback_rows: List[int] = []
         for i in occupied:
             t = takes[i]
             p = self.pos[i]
             plen = len(self.prompt[i])
             was_prefill = p < plen
-            self.pos[i] += t
             self.steps_in[i] += 1
             if was_prefill:
                 self.prefill_chunks[i] += 1
                 prompt_toks += min(t, plen - p)
             emitted = ()
-            if self.pos[i] < plen:    # still prefilling: argmax discarded
+            if p + t < plen:          # still prefilling: argmax discarded
+                self.pos[i] = p + t
                 self.next_tok[i] = self.prompt[i][self.pos[i]]
             else:
-                if picks is None:
-                    picks = np.asarray(picks_dev)
-                # pos crossed (or sits past) the prompt end: the pick at the
-                # row's last consumed column is a generated token
-                tok = int(picks[i, cols[i]] if picks.ndim == 2 else picks[i])
-                self.out[i].append(tok)
-                self.next_tok[i] = tok
-                emitted = (tok,)
-                decode_toks += 1
+                # pos crossed (or sits past) the prompt end: selections at
+                # the row's consumed columns are generated tokens
+                sp = self.sampling[i]
+                gen0 = len(self.out[i]) - plen   # generation index base
+                d = drafts.get(i)
+                toks: List[int] = []
+                lps: List[Optional[float]] = []
+                if d is None:
+                    # plain decode or a prefill chunk crossing the prompt
+                    # end: all t columns were consumed (t - 1 of them
+                    # prompt tokens), the last column's selection is the
+                    # one generated token
+                    tok, lp = select(i, t - 1, gen0)
+                    toks.append(tok)
+                    lps.append(lp)
+                    self.pos[i] = p + t
+                else:
+                    # verify: accept the longest draft prefix matching the
+                    # model's own selections, then the corrected (or bonus)
+                    # token at the stop column — emitted == accepted + 1
+                    for j in range(t):
+                        tok, lp = select(i, j, gen0 + j)
+                        toks.append(tok)
+                        lps.append(lp)
+                        if not (j < len(d) and tok == d[j]):
+                            break
+                    acc = len(toks) - 1
+                    self.drafted[i] += len(d)
+                    self.accepted[i] += acc
+                    self.rejected[i] += len(d) - acc
+                    drafted_toks += len(d)
+                    accepted_toks += acc
+                    if acc < len(d):
+                        # rejected suffix: KV entries were written at the
+                        # dead columns; roll them back after the loop
+                        rollback_rows.append(i)
+                    # consumed columns: the pending token plus the accepted
+                    # draft prefix — the corrected/bonus token is emitted
+                    # but not yet consumed (it feeds the next step)
+                    self.pos[i] = p + len(toks)
+                self.out[i].extend(toks)
+                self.next_tok[i] = toks[-1]
+                if sp is not None and sp.track_logprobs:
+                    self.logprobs[i].extend(lps)
+                emitted = tuple(toks)
+                decode_toks += len(toks)
                 if self.ttft[i] == 0:
                     self.ttft[i] = self.steps_in[i]
             done = len(self.out[i]) - plen >= self.budget[i]
@@ -406,6 +606,18 @@ class _LMSession:
                 finished[i] = self._result(i)
                 self.req[i] = None
                 self._stale.add(i)    # its decode steps advanced the state
+        if rollback_rows:
+            # zero the KV entries at rejected positions so the cache is
+            # bit-identical to a never-speculated session's (one launch for
+            # all rolled-back rows; rows not listed are untouched)
+            keep_len = np.zeros(self.slots, np.int32)
+            mask = np.zeros(self.slots, bool)
+            for i in rollback_rows:
+                mask[i] = True
+                keep_len[i] = self.pos[i]
+            self.cache = self.runner._rollback(
+                self.cache, jnp.asarray(keep_len), jnp.asarray(mask))
         cost = {"units": sum(takes.values()), "prompt_tokens": prompt_toks,
-                "decode_tokens": decode_toks}
+                "decode_tokens": decode_toks, "drafted_tokens": drafted_toks,
+                "accepted_tokens": accepted_toks}
         return StepReport(finished=finished, progress=progress, cost=cost)

@@ -313,6 +313,13 @@ class SLOScheduler:
         # keyed by workload kind — see `_estimate_seconds` for why the step
         # model alone misprices mixed chunk widths
         self._sec_per_unit: Dict[str, float] = {}
+        # most decode tokens one LM slot has emitted in one step: 1 under
+        # plain decode, up to speculate_k+1 when speculative verification
+        # accepts a draft. The step lower bound divides by it — an
+        # optimistic model must assume every future step speculates as well
+        # as the best step observed, or it over-prices decode phases and
+        # evicts requests speculation would have finished in time.
+        self._max_decode_per_slot_step = 1
         self._now = 0.0
 
     def on_clock(self, now: float) -> None:
@@ -326,10 +333,13 @@ class SLOScheduler:
 
     def _optimistic_steps(self, prefill_rem: int, decode_rem: int) -> float:
         """Lower bound on remaining engine steps: prefill at the maximum
-        chunk this scheduler would ever grant, one step per decode token —
-        minus one when both phases remain, because the step that consumes
-        the last prompt token also emits the first decode token."""
-        steps = math.ceil(prefill_rem / self.boost_cap) + decode_rem
+        chunk this scheduler would ever grant, decode at the best
+        emitted-tokens-per-slot-step observed so far (1 until a
+        speculative step demonstrates more — see ``on_report``) — minus
+        one when both phases remain, because the step that consumes the
+        last prompt token also emits the first decode token."""
+        steps = (math.ceil(prefill_rem / self.boost_cap)
+                 + math.ceil(decode_rem / self._max_decode_per_slot_step))
         if prefill_rem > 0 and decode_rem > 0:
             steps -= 1
         return steps
@@ -482,6 +492,15 @@ class SLOScheduler:
             spu = seconds / units
             prev = self._sec_per_unit.get(kind)
             self._sec_per_unit[kind] = spu if prev is None else min(prev, spu)
+        if kind == "lm":
+            # the per-unit model stays a lower bound under speculation
+            # (every emitted token costs >= 1 forward unit); the *step*
+            # model must additionally learn that one step can emit several
+            # tokens per slot, or it over-prices pure-decode tails
+            for prog in report.progress.values():
+                emitted = len(prog.emitted)
+                if emitted > self._max_decode_per_slot_step:
+                    self._max_decode_per_slot_step = emitted
 
     def expire(self, residents: Mapping[int, Request],
                progress: Mapping[int, SlotProgress], *,

@@ -1,0 +1,204 @@
+"""Edge-case regression battery for `transformer.decode_chunk` — the ragged
+multi-token launch that serves as both the chunked-prefill and the
+speculative-verify primitive.
+
+The contract under test: `decode_chunk` IS C sequential `decode_step` calls
+with per-column active masks, fused — so every edge (take=0 rows, C=1,
+full-chunk rows, ragged pos0) must be bit-identical to the sequential
+reference, picks and logits and cache alike. `rollback_cache_rows` must
+restore the exact never-consumed state for the rejected suffix. The
+empty-prompt argmax-placeholder seam (`runners/lm.py` admit()) must
+survive speculation being enabled.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.serve.api import EngineConfig, Request, StepBudget
+from repro.serve.core import EngineCore
+from repro.serve.runners.lm import LMRunner
+
+CFG = ArchConfig(name="t-chunk", family="dense", n_layers=1, d_model=32,
+                 n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=31,
+                 dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tf.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _caches_equal(a, b, rows=None):
+    """Compare caches exactly; with ``rows``, only those batch rows."""
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if rows is not None:
+            axis = 1 if x.ndim >= 4 and x.shape[0] != len(rows) else 0
+            x = np.take(x, np.flatnonzero(rows), axis=axis)
+            y = np.take(y, np.flatnonzero(rows), axis=axis)
+        np.testing.assert_array_equal(x, y)
+
+
+def _sequential_reference(params, cache, tokens, pos0, take):
+    """C decode_step calls with per-column active masks — the semantics
+    decode_chunk fuses."""
+    b, c = tokens.shape
+    picks = np.zeros((b, c), np.int32)
+    logits = np.zeros((b, c, CFG.vocab), np.float32)
+    for t in range(c):
+        act = np.arange(c)[t] < take
+        lg, cache = tf.decode_step(
+            params, cache, {"tokens": tokens[:, t][:, None]},
+            jnp.asarray(pos0 + t, jnp.int32), CFG,
+            active=jnp.asarray(act))
+        last = np.asarray(lg[:, -1])
+        picks[:, t] = last.argmax(axis=-1)
+        logits[:, t] = last
+    return picks, logits, cache
+
+
+def _rand_tokens(b, c, seed=0):
+    return np.random.default_rng(seed).integers(
+        1, CFG.vocab, size=(b, c)).astype(np.int32)
+
+
+def test_c1_equals_decode_step_exactly(params):
+    """A width-1 chunk is one decode_step: picks, logits and cache all
+    bit-identical (the seam the session's pow2 bucketing relies on)."""
+    b = 3
+    tokens = _rand_tokens(b, 1)
+    pos0 = np.array([0, 2, 5], np.int32)
+    cache = tf.init_cache(CFG, b, SEQ)
+    # seed the caches identically with a couple of positions of history
+    for t in range(2):
+        _, cache = tf.decode_step(params, cache,
+                                  {"tokens": _rand_tokens(b, 1, 9 + t)},
+                                  jnp.asarray(pos0 - 2 + t), CFG)
+
+    step_logits, step_cache = tf.decode_step(
+        params, cache, {"tokens": tokens}, jnp.asarray(pos0), CFG)
+    picks, logits, chunk_cache = tf.decode_chunk(
+        params, cache, jnp.asarray(tokens), pos0,
+        jnp.ones(b, np.int32), CFG)
+
+    np.testing.assert_array_equal(
+        np.asarray(picks)[:, 0], np.asarray(step_logits[:, -1]).argmax(-1))
+    np.testing.assert_array_equal(np.asarray(logits)[:, 0],
+                                  np.asarray(step_logits[:, -1]))
+    _caches_equal(chunk_cache, step_cache)
+
+
+def test_take_zero_rows_freeze(params):
+    """take=0 rows advance no cache and their outputs are garbage to be
+    ignored — the inactive-slot contract free slots ride along on."""
+    b, c = 3, 4
+    tokens = _rand_tokens(b, c)
+    pos0 = np.zeros(b, np.int32)
+    take = np.array([c, 0, 2], np.int32)
+    cache = tf.init_cache(CFG, b, SEQ)
+    _, _, new_cache = tf.decode_chunk(params, cache, jnp.asarray(tokens),
+                                      jnp.asarray(pos0),
+                                      jnp.asarray(take), CFG)
+    frozen = np.array([False, True, False])
+    _caches_equal(new_cache, cache, rows=frozen)
+    # active rows did write: their KV entries moved off the zero init
+    changed = np.array([True, False, True])
+    with pytest.raises(AssertionError):
+        _caches_equal(new_cache, cache, rows=changed)
+
+
+def test_ragged_chunk_matches_sequential_decode_steps(params):
+    """Full-chunk, partial, and single-token rows at ragged pos0, against
+    the C-sequential-decode_steps reference: bit-identical picks, logits
+    at every consumed column, and cache."""
+    b, c = 4, 5
+    tokens = _rand_tokens(b, c, 3)
+    pos0 = np.array([0, 3, 1, 6], np.int32)
+    take = np.array([c, 1, 3, 2], np.int32)   # full / one / partial / partial
+    cache0 = tf.init_cache(CFG, b, SEQ)
+
+    ref_picks, ref_logits, ref_cache = _sequential_reference(
+        params, cache0, tokens, pos0, take)
+    picks, logits, cache = tf.decode_chunk(
+        params, cache0, jnp.asarray(tokens), jnp.asarray(pos0),
+        jnp.asarray(take), CFG)
+
+    picks, logits = np.asarray(picks), np.asarray(logits)
+    for i in range(b):
+        cols = np.arange(take[i])             # masked columns carry garbage
+        np.testing.assert_array_equal(picks[i, cols], ref_picks[i, cols])
+        np.testing.assert_array_equal(logits[i, cols], ref_logits[i, cols])
+    _caches_equal(cache, ref_cache)
+
+
+def test_rollback_restores_never_consumed_state(params):
+    """Consume a verify-shaped chunk, roll the suffix back: the cache must
+    equal one that only ever consumed the accepted prefix."""
+    b, c = 2, 4
+    tokens = _rand_tokens(b, c, 4)
+    pos0 = np.array([2, 5], np.int32)
+    cache0 = tf.init_cache(CFG, b, SEQ)
+    # seed history up to pos0 so the rollback boundary is interior
+    for t in range(2):
+        _, cache0 = tf.decode_step(params, cache0,
+                                   {"tokens": _rand_tokens(b, 1, 7 + t)},
+                                   jnp.asarray(pos0 - 2 + t), CFG)
+
+    keep = np.array([1, 3], np.int32)          # accepted columns per row
+    _, _, full = tf.decode_chunk(params, cache0, jnp.asarray(tokens),
+                                 jnp.asarray(pos0),
+                                 jnp.full(b, c, np.int32), CFG)
+    _, _, prefix = tf.decode_chunk(params, cache0, jnp.asarray(tokens),
+                                   jnp.asarray(pos0),
+                                   jnp.asarray(keep), CFG)
+    rolled = tf.rollback_cache_rows(full, jnp.asarray(pos0 + keep),
+                                    jnp.ones(b, bool))
+    _caches_equal(rolled, prefix)
+    # and a False row mask leaves a row untouched
+    half = tf.rollback_cache_rows(full, jnp.asarray(pos0 + keep),
+                                  jnp.asarray([True, False]))
+    _caches_equal(half, prefix, rows=np.array([True, False]))
+    _caches_equal(half, full, rows=np.array([False, True]))
+
+
+def test_empty_prompt_placeholder_seam_with_speculation(params):
+    """The empty-prompt argmax-placeholder 0 (batch-path parity seam in
+    `runners/lm.py` admit()) survives speculation: same stream as the
+    plain session, placeholder logprob recorded as 0.0."""
+    outs = {}
+    for label, k in (("plain", 0), ("spec", 4)):
+        runner = LMRunner(CFG, params, max_seq=SEQ, speculate_k=k)
+        core = EngineCore(runner, EngineConfig(slots=2))
+        rid = core.submit([], max_new_tokens=8, logprobs=True)
+        full = core.submit([5, 4, 3], max_new_tokens=8)
+        results = core.run_until_complete()
+        assert results[rid].outputs[0] == 0      # forced placeholder
+        assert results[rid].stats["logprobs"][0] == 0.0
+        assert len(results[rid].stats["logprobs"]) == 8
+        outs[label] = (results[rid].outputs, results[full].outputs)
+    assert outs["plain"] == outs["spec"]
+
+
+def test_session_chunk_c1_bucket_equals_budget_chunk1(params):
+    """Session-level seam: a budget that produces width-1 launches and one
+    that produces wider (bucketed) launches emit the same stream."""
+    runner = LMRunner(CFG, params, max_seq=SEQ)
+    streams = {}
+    for chunk in (1, 4):
+        sess = runner.open_session(slots=2)
+        sess.admit(0, Request(0, [1, 2, 3, 4, 5, 6], {"max_new_tokens": 6}))
+        sess.admit(1, Request(1, [9, 8], {"max_new_tokens": 6}))
+        done = {}
+        for _ in range(50):
+            done.update(sess.step(StepBudget(chunk=chunk)).finished)
+            if len(done) == 2:
+                break
+        streams[chunk] = [done[i].outputs for i in (0, 1)]
+    assert streams[1] == streams[4]

@@ -1,0 +1,278 @@
+"""Differential tests for the serving sampling layer (`serve.sampling`).
+
+Three layers of coverage:
+
+* filter semantics on fixed logits against pure-numpy references written
+  inline (independent of the implementation's own helpers): temperature
+  scaling, top-k with stable tie-breaks, nucleus top-p keeping the
+  crossing token, and the composed pipeline;
+* determinism: the token at generation index i is a pure function of
+  (seed, i, logits) — identical across repeated calls, engine restarts,
+  and the router's drain/re-route replay;
+* integration: `Result.stats['logprobs']` equals log_softmax of the raw
+  per-position logits at the chosen tokens (checked against a manual
+  `decode_step` teacher-forcing loop), and temperature -> 0 degenerates to
+  the greedy path bit-identically.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.serve import sampling
+from repro.serve.api import EngineConfig, Request, StepBudget
+from repro.serve.core import EngineCore, StepClock
+from repro.serve.runners.lm import LMRunner
+from repro.serve.sampling import SamplingParams
+
+CFG = ArchConfig(name="t-sampling", family="dense", n_layers=1, d_model=32,
+                 n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=31,
+                 dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tf.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def runner(params):
+    return LMRunner(CFG, params, max_seq=32)
+
+
+def _logits(seed=0, n=16):
+    return np.random.default_rng(seed).normal(size=n)
+
+
+# ---------------------------------------------------------------------------
+# Filter semantics vs inline numpy references
+# ---------------------------------------------------------------------------
+
+def test_log_softmax_reference():
+    x = _logits(1)
+    ref = np.log(np.exp(x) / np.exp(x).sum())
+    np.testing.assert_allclose(sampling.log_softmax(x), ref, atol=1e-12)
+    # stability: a huge offset changes nothing
+    np.testing.assert_allclose(sampling.log_softmax(x + 1e4),
+                               sampling.log_softmax(x), atol=1e-9)
+
+
+@pytest.mark.parametrize("k", [1, 3, 7, 15, 16, 0])
+def test_top_k_keeps_exactly_k(k):
+    x = _logits(2)
+    out = sampling.apply_top_k(x, k)
+    kept = np.isfinite(out)
+    if k == 0 or k >= x.size:
+        assert kept.all()
+        np.testing.assert_array_equal(out, x)
+    else:
+        assert kept.sum() == k
+        # the kept set is the k largest by value
+        ref_kept = set(np.argsort(-x, kind="stable")[:k])
+        assert set(np.flatnonzero(kept)) == ref_kept
+        np.testing.assert_array_equal(out[kept], x[kept])
+
+
+def test_top_k_tie_break_is_stable():
+    # four-way tie at the top, k=2: the two lowest token ids survive
+    x = np.array([-1.0, 5.0, 5.0, 5.0, 5.0, 0.0])
+    out = sampling.apply_top_k(x, 2)
+    assert set(np.flatnonzero(np.isfinite(out))) == {1, 2}
+
+
+def test_top_p_reference():
+    x = _logits(3)
+    p = 0.7
+    out = sampling.apply_top_p(x, p)
+    # inline reference: sort probs descending, keep the smallest prefix
+    # whose cumulative mass reaches p (crossing token kept)
+    probs = np.exp(x - x.max())
+    probs = probs / probs.sum()
+    order = np.argsort(-x, kind="stable")
+    cum = np.cumsum(probs[order])
+    n_keep = int(np.searchsorted(cum, p, side="left")) + 1
+    ref_kept = set(order[:n_keep])
+    assert set(np.flatnonzero(np.isfinite(out))) == ref_kept
+    assert cum[n_keep - 1] >= p                   # kept mass reaches p
+    if n_keep > 1:
+        assert cum[n_keep - 2] < p                # smallest such prefix
+
+
+def test_top_p_always_keeps_top_token():
+    x = np.array([0.0, 10.0, 0.0])
+    out = sampling.apply_top_p(x, 1e-9)
+    assert np.isfinite(out[1])
+    assert np.isfinite(out).sum() == 1
+
+
+def test_top_p_after_top_k_respects_masks():
+    x = _logits(4)
+    masked = sampling.apply_top_k(x, 5)
+    out = sampling.apply_top_p(masked, 0.5)
+    # nothing masked by top-k ever comes back
+    assert not np.isfinite(out[~np.isfinite(masked)]).any()
+    assert np.isfinite(out).sum() >= 1
+
+
+def test_sample_matches_inline_reference():
+    x = _logits(5)
+    params = SamplingParams(temperature=0.7, top_k=8, top_p=0.9, seed=123)
+    for index in range(6):
+        # reference pipeline, written out independently
+        y = x / 0.7
+        order = np.argsort(-y, kind="stable")
+        y_k = np.full_like(y, -np.inf)
+        y_k[order[:8]] = y[order[:8]]
+        probs = np.exp(y_k - y_k[np.isfinite(y_k)].max())
+        probs[~np.isfinite(y_k)] = 0.0
+        probs = probs / probs.sum()
+        cum = np.cumsum(probs[order])
+        n_keep = int(np.searchsorted(cum, 0.9, side="left")) + 1
+        y_p = np.full_like(y, -np.inf)
+        y_p[order[:n_keep]] = y_k[order[:n_keep]]
+        probs = np.exp(y_p - y_p[np.isfinite(y_p)].max())
+        probs[~np.isfinite(y_p)] = 0.0
+        probs = probs / probs.sum()
+        rng = np.random.default_rng(
+            np.random.SeedSequence((123, index)))
+        ref_tok = int(rng.choice(probs.size, p=probs))
+        tok, lp = sampling.sample(x, params, index)
+        assert tok == ref_tok
+        # logprob comes from the RAW distribution, pre-filter
+        np.testing.assert_allclose(lp, sampling.log_softmax(x)[tok],
+                                   atol=1e-12)
+
+
+def test_temperature_zero_is_exact_argmax():
+    x = _logits(6)
+    x[3] = x.max() + 1.0
+    tok, lp = sampling.sample(x, SamplingParams(temperature=0.0), index=0)
+    assert tok == 3
+    np.testing.assert_allclose(lp, sampling.log_softmax(x)[3], atol=1e-12)
+    # tie-break: first maximum, same as np.argmax / the device greedy path
+    x2 = np.array([1.0, 7.0, 7.0, 0.0])
+    tok2, _ = sampling.sample(x2, SamplingParams(temperature=0.0), index=0)
+    assert tok2 == int(np.argmax(x2)) == 1
+
+
+def test_token_rng_pure_function_of_seed_and_index():
+    draws = [sampling.token_rng(9, i).integers(1 << 30) for i in range(4)]
+    again = [sampling.token_rng(9, i).integers(1 << 30) for i in range(4)]
+    assert draws == again
+    assert len(set(draws)) > 1                    # indices are independent
+    other = [sampling.token_rng(10, i).integers(1 << 30) for i in range(4)]
+    assert draws != other                         # seeds are independent
+
+
+def test_params_validation_and_opt_in():
+    with pytest.raises(AssertionError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(AssertionError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(AssertionError):
+        SamplingParams(top_k=-1)
+    assert SamplingParams.from_options({"max_new_tokens": 4}) is None
+    sp = SamplingParams.from_options({"temperature": 0.5, "seed": 3})
+    assert sp is not None and not sp.greedy and sp.track_logprobs
+    greedy = SamplingParams.from_options({"seed": 3})
+    assert greedy.greedy and not greedy.track_logprobs
+    assert SamplingParams.from_options({"logprobs": True}).track_logprobs
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: determinism, logprobs, greedy degeneration
+# ---------------------------------------------------------------------------
+
+def _serve(runner, prompts, options, slots=2):
+    core = EngineCore(runner, EngineConfig(slots=slots))
+    ids = [core.submit(p, **o) for p, o in zip(prompts, options)]
+    results = core.run_until_complete()
+    return [results[i] for i in ids]
+
+
+PROMPTS = [[1, 2, 3, 4], [7, 5, 3]]
+
+
+def test_same_seed_identical_across_engine_restarts(runner):
+    options = [{"max_new_tokens": 8, "temperature": 0.9, "top_p": 0.9,
+                "seed": 40 + i} for i in range(len(PROMPTS))]
+    first = _serve(runner, PROMPTS, options)
+    second = _serve(runner, PROMPTS, options)    # fresh engine + session
+    assert [r.outputs for r in first] == [r.outputs for r in second]
+    assert [r.stats["logprobs"] for r in first] == \
+        [r.stats["logprobs"] for r in second]
+    # a different seed diverges (the distribution is not degenerate)
+    other = _serve(runner, PROMPTS,
+                   [dict(o, seed=o["seed"] + 100) for o in options])
+    assert [r.outputs for r in other] != [r.outputs for r in first]
+
+
+def test_sampled_replay_bit_identical_under_router_reroute(params):
+    """The router re-routes a wedged replica's in-flight sampled request by
+    resubmitting the frozen Request — the per-(seed, index) contract makes
+    the replayed stream bit-identical to a fault-free run."""
+    from repro.serve.faults import parse_fleet_plan
+    from repro.serve.router import make_router
+    runner = LMRunner(CFG, params, max_seq=32)
+    opts = {"max_new_tokens": 6, "temperature": 0.8, "top_k": 12, "seed": 5}
+
+    ref_core = EngineCore(runner, EngineConfig(slots=2), clock=StepClock())
+    ref_id = ref_core.submit(PROMPTS[0], **opts)
+    ref = ref_core.run_until_complete()[ref_id]
+
+    plans = parse_fleet_plan("0=wedge@4")
+    router = make_router(runner, 2, EngineConfig(slots=2), plans=plans,
+                         wedge_patience=3)
+    rid = router.submit(PROMPTS[0], affinity="a", **opts)
+    for _ in range(200):
+        router.step()
+        if not router._outstanding:
+            break
+    res = router.poll(rid)
+    assert res.status == "ok"
+    assert router.stats()["rerouted"] >= 1
+    assert res.outputs == ref.outputs
+    assert res.stats["logprobs"] == ref.stats["logprobs"]
+
+
+def test_logprobs_equal_log_softmax_of_chosen_tokens(runner, params):
+    """Teacher-force the served stream through a manual `decode_step` loop
+    and check every surfaced logprob is log_softmax(raw logits)[token]."""
+    opts = {"max_new_tokens": 6, "temperature": 0.7, "top_p": 0.95, "seed": 2}
+    res = _serve(runner, [PROMPTS[0]], [opts], slots=1)[0]
+    out = res.outputs
+    plen = len(PROMPTS[0])
+    gen = out[plen:]
+    lps = res.stats["logprobs"]
+    assert len(lps) == len(gen) == opts["max_new_tokens"]
+
+    cache = tf.init_cache(CFG, 1, 32)
+    ref_lps = []
+    for pos, tok in enumerate(out[:-1]):
+        logits, cache = tf.decode_step(
+            params, cache, {"tokens": np.array([[tok]], np.int32)},
+            np.array([pos], np.int32), CFG)
+        if pos >= plen - 1:           # this distribution selected out[pos+1]
+            lsm = sampling.log_softmax(np.asarray(logits[0, -1]))
+            ref_lps.append(float(lsm[out[pos + 1]]))
+    np.testing.assert_allclose(lps, ref_lps, atol=1e-6)
+
+
+def test_temperature_zero_request_is_bit_identical_to_greedy(runner):
+    plain = _serve(runner, PROMPTS,
+                   [{"max_new_tokens": 8}] * len(PROMPTS))
+    t0 = _serve(runner, PROMPTS,
+                [{"max_new_tokens": 8, "temperature": 0.0, "seed": 77,
+                  "logprobs": True} for _ in PROMPTS])
+    assert [r.outputs for r in plain] == [r.outputs for r in t0]
+    # the greedy path only surfaces logprobs when asked
+    assert all("logprobs" not in r.stats for r in plain)
+    assert all(len(r.stats["logprobs"]) == 8 for r in t0)
+
+
+def test_batch_admission_rejects_sampling_options(runner):
+    core = EngineCore(runner, EngineConfig(slots=2, admission="batch"))
+    core.submit(PROMPTS[0], max_new_tokens=4, temperature=0.5, seed=1)
+    with pytest.raises(ValueError, match="greedy-only"):
+        core.run_until_complete()

@@ -1,0 +1,358 @@
+"""Property battery for speculative decode (`serve.speculative` + the
+`_LMSession` verify/accept/rollback machinery).
+
+The invariant under test everywhere: drafts may only change how many
+positions one launch advances — never which tokens come out. Concretely:
+
+* speculative greedy output is bit-identical to plain greedy decode, for
+  the real n-gram proposer across >= 4 model seeds AND for adversarial
+  stub proposers (all-right / all-wrong / partially-right / empty);
+* the acceptance ledger closes exactly: accepted + rejected == drafted,
+  per request and in aggregate;
+* after rollback, the KV cache and positions match a never-speculated
+  session bit-for-bit (the all-wrong proposer rejects every draft, so
+  every step exercises the rollback launch);
+* speculation composes with the other session invariants: chunked-prefill
+  joiners in the same launch, cancel mid-speculation with slot reuse,
+  per-step units caps trimming draft tails, and sampled requests.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.serve.api import EngineConfig, Request, StepBudget
+from repro.serve.core import EngineCore
+from repro.serve.runners.lm import LMRunner
+from repro.serve.speculative import NGramProposer, Proposer
+
+CFG = ArchConfig(name="t-spec", family="dense", n_layers=1, d_model=32,
+                 n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=31,
+                 dtype="float32", remat="none", q_chunk=8, kv_chunk=8)
+
+PROMPTS = [[1, 2, 3, 4], [7, 5, 3], [9, 9]]
+TOKENS = 12
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tf.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def plain_runner(params):
+    return LMRunner(CFG, params, max_seq=32)
+
+
+def _serve(runner, prompts, options=None, slots=2, **cfg_kw):
+    core = EngineCore(runner, EngineConfig(slots=slots, **cfg_kw))
+    options = options or [{"max_new_tokens": TOKENS}] * len(prompts)
+    ids = [core.submit(p, **o) for p, o in zip(prompts, options)]
+    results = core.run_until_complete()
+    return [results[i] for i in ids]
+
+
+def _assert_ledger(results):
+    for r in results:
+        s = r.stats
+        assert s["accepted_tokens"] + s["rejected_tokens"] \
+            == s["drafted_tokens"], s
+
+
+# ---------------------------------------------------------------------------
+# NGramProposer units
+# ---------------------------------------------------------------------------
+
+def test_ngram_finds_repeated_continuation():
+    p = NGramProposer(max_ngram=3, min_ngram=1, max_k=4)
+    #             match ...........v          v trailing 2-gram
+    history = [5, 1, 2, 8, 9, 3, 0, 1, 2]
+    assert p.propose(history, 4) == [8, 9, 3, 0]
+
+
+def test_ngram_prefers_longer_ngram_and_most_recent_match():
+    p = NGramProposer(max_ngram=2, min_ngram=1, max_k=2)
+    # trailing [4, 2]: the 2-gram match at index 2 wins over any 1-gram
+    # match on [2] alone
+    assert p.propose([9, 9, 4, 2, 7, 7, 4, 2], 2) == [7, 7]
+    # two 1-gram matches on [3]: the most recent one (followed by 6) wins
+    assert p.propose([3, 5, 3, 6, 1, 3], 2) == [6, 1]
+
+
+def test_ngram_empty_when_no_match_or_no_room():
+    p = NGramProposer()
+    assert p.propose([1, 2, 3, 4], 4) == []        # no repeated suffix
+    assert p.propose([7], 4) == []                 # history too short
+    assert p.propose([1, 2, 1], 0) == []           # k == 0
+
+
+def test_ngram_respects_max_k():
+    p = NGramProposer(max_ngram=1, min_ngram=1, max_k=2)
+    assert p.propose([4, 5, 6, 7, 8, 4], 8) == [5, 6]
+
+
+def test_proposer_protocol():
+    assert isinstance(NGramProposer(), Proposer)
+
+
+def test_speculation_gated_to_kv_architectures(params):
+    recurrent = dataclasses.replace(CFG, pattern=("rglru",))
+    with pytest.raises(AssertionError, match="rollback"):
+        LMRunner(recurrent, params, max_seq=32, speculate_k=2)
+    LMRunner(recurrent, params, max_seq=32)        # fine without speculation
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: real proposer, >= 4 model seeds
+# ---------------------------------------------------------------------------
+
+def test_ngram_speculative_bit_identical_across_seeds():
+    total_drafted = 0
+    for seed in range(4):
+        params = tf.init_params(jax.random.PRNGKey(seed), CFG)
+        plain = _serve(LMRunner(CFG, params, max_seq=32), PROMPTS)
+        spec_results = _serve(
+            LMRunner(CFG, params, max_seq=32, speculate_k=4), PROMPTS)
+        assert [r.outputs for r in plain] == \
+            [r.outputs for r in spec_results], f"seed {seed}"
+        _assert_ledger(spec_results)
+        total_drafted += sum(r.stats["drafted_tokens"] for r in spec_results)
+    # tiny models cycle, so prompt lookup genuinely drafts across the sweep
+    assert total_drafted > 0
+
+
+# ---------------------------------------------------------------------------
+# Adversarial proposers: all-right / all-wrong / partially-right / empty
+# ---------------------------------------------------------------------------
+
+class OracleProposer:
+    """Draft from the precomputed plain-greedy streams, corrupted per mode.
+
+    Greedy emission always follows the plain stream (that is the invariant
+    under test), so the history of any slot is a prefix of its stream and
+    the true continuation is known exactly."""
+
+    def __init__(self, streams, mode, n_wrong=2):
+        self.by_prompt = {tuple(s[:len(p)]): s
+                          for p, s in zip(PROMPTS, streams)}
+        self.mode = mode
+        self.n_wrong = n_wrong
+
+    def propose(self, history, k):
+        full = next(s for pfx, s in self.by_prompt.items()
+                    if tuple(history[:len(pfx)]) == pfx)
+        assert list(history) == full[:len(history)], (
+            "emitted stream diverged from plain greedy")
+        right = full[len(history):len(history) + k]
+        if self.mode == "empty" or not right:
+            return []
+        wrong = [(t + 1) % CFG.vocab for t in right]
+        if self.mode == "all_right":
+            return right
+        if self.mode == "all_wrong":
+            return wrong
+        split = max(0, len(right) - self.n_wrong)   # partially right
+        return right[:split] + wrong[split:]
+
+
+@pytest.fixture(scope="module")
+def plain_streams(plain_runner):
+    return [r.outputs for r in _serve(plain_runner, PROMPTS)]
+
+
+@pytest.mark.parametrize("mode", ["all_right", "all_wrong",
+                                  "partially_right", "empty"])
+def test_adversarial_drafts_bit_identical(params, plain_streams, mode):
+    runner = LMRunner(CFG, params, max_seq=32, speculate_k=4,
+                      proposer=OracleProposer(plain_streams, mode))
+    results = _serve(runner, PROMPTS)
+    assert [r.outputs for r in results] == plain_streams
+    _assert_ledger(results)
+    drafted = sum(r.stats["drafted_tokens"] for r in results)
+    accepted = sum(r.stats["accepted_tokens"] for r in results)
+    if mode == "empty":
+        assert drafted == 0
+    elif mode == "all_right":
+        assert drafted > 0 and accepted == drafted
+    elif mode == "all_wrong":
+        assert drafted > 0 and accepted == 0
+    else:
+        assert 0 < accepted < drafted
+
+
+def test_random_drafts_bit_identical(params, plain_streams):
+    """Random token drafts across >= 4 draft seeds: whatever junk the
+    proposer offers, the emitted stream never moves."""
+    class RandomProposer:
+        def __init__(self, seed):
+            self.rng = np.random.default_rng(seed)
+
+        def propose(self, history, k):
+            n = int(self.rng.integers(0, k + 1))
+            return [int(t) for t in self.rng.integers(0, CFG.vocab, size=n)]
+
+    for seed in range(4):
+        runner = LMRunner(CFG, params, max_seq=32, speculate_k=4,
+                          proposer=RandomProposer(seed))
+        results = _serve(runner, PROMPTS)
+        assert [r.outputs for r in results] == plain_streams, f"seed {seed}"
+        _assert_ledger(results)
+
+
+# ---------------------------------------------------------------------------
+# Rollback: KV cache / positions match a never-speculated session
+# ---------------------------------------------------------------------------
+
+def _assert_caches_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_rollback_cache_and_positions_match_plain_session(
+        params, plain_streams):
+    """All-wrong drafts force a rollback on every verify step; the session's
+    KV cache and position vector must end bit-identical to a session that
+    never speculated."""
+    spec_runner = LMRunner(CFG, params, max_seq=32, speculate_k=4,
+                           proposer=OracleProposer(plain_streams, "all_wrong"))
+    plain_sess = LMRunner(CFG, params, max_seq=32).open_session(slots=2)
+    spec_sess = spec_runner.open_session(slots=2)
+    for sess in (plain_sess, spec_sess):
+        sess.admit(0, Request(0, PROMPTS[0], {"max_new_tokens": TOKENS}))
+        sess.admit(1, Request(1, PROMPTS[1], {"max_new_tokens": TOKENS}))
+        done = 0
+        for _ in range(100):
+            done += len(sess.step(StepBudget()).finished)
+            if done == 2:
+                break
+        assert done == 2
+    assert spec_sess.out == plain_sess.out
+    assert spec_sess.pos == plain_sess.pos
+    assert sum(spec_sess.rejected) == sum(spec_sess.drafted) > 0
+    _assert_caches_equal(spec_sess.cache, plain_sess.cache)
+
+
+def test_accepted_prefix_cache_matches_plain_session(params, plain_streams):
+    """The accept path too: partially-right drafts leave accepted KV
+    entries in place and zero only the rejected suffix."""
+    spec_runner = LMRunner(
+        CFG, params, max_seq=32, speculate_k=4,
+        proposer=OracleProposer(plain_streams, "partially_right"))
+    plain_sess = LMRunner(CFG, params, max_seq=32).open_session(slots=1)
+    spec_sess = spec_runner.open_session(slots=1)
+    for sess in (plain_sess, spec_sess):
+        sess.admit(0, Request(0, PROMPTS[0], {"max_new_tokens": TOKENS}))
+        for _ in range(100):
+            if sess.step(StepBudget()).finished:
+                break
+    assert spec_sess.out == plain_sess.out
+    assert spec_sess.accepted[0] > 0 and spec_sess.rejected[0] > 0
+    _assert_caches_equal(spec_sess.cache, plain_sess.cache)
+
+
+# ---------------------------------------------------------------------------
+# Composition: chunked prefill, cancel, budget caps, sampling
+# ---------------------------------------------------------------------------
+
+def test_speculative_rows_coexist_with_chunked_prefill_joiner(params):
+    """A long prompt prefills in chunks inside the same launches whose
+    other rows are speculatively verifying — outputs bit-identical to the
+    plain engine on the same trace."""
+    long_prompt = [int(t) for t in
+                   np.random.default_rng(0).integers(1, CFG.vocab, size=14)]
+    prompts = [PROMPTS[0], PROMPTS[1], long_prompt]
+    opts = [{"max_new_tokens": TOKENS}] * 3
+    plain = _serve(LMRunner(CFG, params, max_seq=32), prompts, opts,
+                   slots=2, prefill_chunk=4)
+    spec = _serve(LMRunner(CFG, params, max_seq=32, speculate_k=4), prompts,
+                  opts, slots=2, prefill_chunk=4)
+    assert [r.outputs for r in plain] == [r.outputs for r in spec]
+    _assert_ledger(spec)
+
+
+def test_cancel_mid_speculation_reclaims_slot_cleanly(params, plain_streams):
+    """Cancel a slot while its drafts are mid-flight; the next occupant of
+    that slot decodes bit-identically to a solo run (no speculative KV
+    leakage through the stale-reset / position-masking path)."""
+    runner = LMRunner(CFG, params, max_seq=32, speculate_k=4,
+                      proposer=OracleProposer(plain_streams, "all_wrong"))
+    sess = runner.open_session(slots=2)
+    sess.admit(0, Request(0, PROMPTS[0], {"max_new_tokens": TOKENS}))
+    sess.admit(1, Request(1, PROMPTS[1], {"max_new_tokens": TOKENS}))
+    # step until slot 0 has speculated (and had drafts rejected) at least once
+    for _ in range(20):
+        sess.step(StepBudget())
+        if sess.drafted[0] > 0:
+            break
+    assert sess.drafted[0] > 0
+    res = sess.cancel(0)
+    assert res.status == "cancelled"
+    assert res.stats["rejected_tokens"] == res.stats["drafted_tokens"] > 0
+
+    # reuse the slot: new occupant must match its plain solo stream
+    sess.admit(0, Request(2, PROMPTS[2], {"max_new_tokens": TOKENS}))
+    outs = {}
+    for _ in range(100):
+        outs.update(sess.step(StepBudget()).finished)
+        if len(outs) == 2:
+            break
+    assert outs[0].outputs == plain_streams[2]
+    assert outs[1].outputs == plain_streams[1]
+
+
+def test_units_cap_trims_draft_tails(params):
+    """A tight per-step units budget trims speculative drafts (never below
+    one token per slot) exactly like it trims prefill chunks."""
+    class ConstantProposer:
+        def propose(self, history, k):
+            return [0] * k
+
+    runner = LMRunner(CFG, params, max_seq=32, speculate_k=4,
+                      proposer=ConstantProposer())
+    sess = runner.open_session(slots=2)
+    sess.admit(0, Request(0, [3], {"max_new_tokens": TOKENS}))
+    sess.admit(1, Request(1, [5], {"max_new_tokens": TOKENS}))
+    sess.step(StepBudget())                 # consume the 1-token prompts
+
+    rep = sess.step(StepBudget(units=2))    # cap == slots: no room to draft
+    assert rep.cost["units"] == 2
+    assert rep.cost["drafted_tokens"] == 0
+
+    rep = sess.step(StepBudget(units=4))    # room for a trimmed draft only
+    assert rep.cost["units"] == 4
+    assert 0 < rep.cost["drafted_tokens"] <= 2
+
+    rep = sess.step(StepBudget())           # uncapped: full drafts
+    assert rep.cost["drafted_tokens"] == 8
+
+
+def test_sampled_requests_speculate_bit_identically(params):
+    opts = [{"max_new_tokens": TOKENS, "temperature": 0.8, "top_p": 0.9,
+             "seed": 11 + i} for i in range(len(PROMPTS))]
+    plain = _serve(LMRunner(CFG, params, max_seq=32), PROMPTS, opts)
+    spec = _serve(LMRunner(CFG, params, max_seq=32, speculate_k=4),
+                  PROMPTS, opts)
+    assert [r.outputs for r in plain] == [r.outputs for r in spec]
+    assert [r.stats["logprobs"] for r in plain] == \
+        [r.stats["logprobs"] for r in spec]
+    _assert_ledger(spec)
+
+
+def test_engine_stats_aggregate_speculation(params):
+    core = EngineCore(LMRunner(CFG, params, max_seq=32, speculate_k=4),
+                      EngineConfig(slots=2))
+    ids = [core.submit(p, max_new_tokens=TOKENS) for p in PROMPTS]
+    results = core.run_until_complete()
+    stats = core.stats()
+    assert stats["drafted_tokens"] == sum(
+        results[i].stats["drafted_tokens"] for i in ids)
+    assert stats["accepted_tokens"] == sum(
+        results[i].stats["accepted_tokens"] for i in ids)
+    assert 0.0 <= stats["accept_rate"] <= 1.0
+    assert stats["goodput_accepted_tok_per_step"] >= 0.0

@@ -12,6 +12,10 @@ sub-dict must carry its recovery/goodput keys with sane types.
 `serve_engine_precision` records likewise: every fleet must report both
 cost models' served energy, and the adaptive scenario must carry its
 vs-pinned energy wins and bit-identity flags.
+`serve_engine_speculative` records: plain and speculative modes must both
+report their decode-goodput metrics, the speculative mode its draft/accept
+ledger, and the record its accept rate, vs-plain goodput win, greedy
+bit-identity flag and sampled seed-determinism flag.
 Stdlib-only — runs in the docs CI job without the jax toolchain.
 
     python tools/check_bench_schema.py [BENCH_results.json ...]
@@ -119,6 +123,55 @@ def check_precision_record(rec) -> list:
     return problems
 
 
+# bench_speculative records: both decode modes' goodput on the same greedy
+# trace, the speculative draft/accept ledger, and the correctness flags the
+# CI smoke guard gates on.
+SPECULATIVE_MODE_KEYS = ("steps_run", "decode_tokens",
+                         "goodput_decode_tok_per_step")
+SPECULATIVE_LEDGER_KEYS = ("drafted_tokens", "accepted_tokens",
+                           "goodput_accepted_tok_per_step")
+SPECULATIVE_NUMERIC = ("accept_rate", "goodput_win")
+SPECULATIVE_BOOL = ("bit_identical",)
+
+
+def check_speculative_record(rec) -> list:
+    problems = []
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict):
+        return problems                 # shape error already reported
+    for mode in ("plain", "speculative"):
+        sub = metrics.get(mode)
+        if not isinstance(sub, dict):
+            problems.append(f"metrics.{mode} missing or not an object")
+            continue
+        keys = SPECULATIVE_MODE_KEYS
+        if mode == "speculative":
+            keys = keys + SPECULATIVE_LEDGER_KEYS
+        for k in keys:
+            if k not in sub:
+                problems.append(f"metrics.{mode} missing '{k}'")
+            elif isinstance(sub[k], bool) or not isinstance(
+                    sub[k], (int, float)):
+                problems.append(f"metrics.{mode}.{k} must be numeric")
+    for k in SPECULATIVE_NUMERIC:
+        if k not in metrics:
+            problems.append(f"metrics missing '{k}'")
+        elif isinstance(metrics[k], bool) or not isinstance(
+                metrics[k], (int, float)):
+            problems.append(f"metrics.{k} must be numeric")
+    for k in SPECULATIVE_BOOL:
+        if k not in metrics:
+            problems.append(f"metrics missing '{k}'")
+        elif not isinstance(metrics[k], bool):
+            problems.append(f"metrics.{k} must be a bool")
+    sampling = metrics.get("sampling")
+    if not isinstance(sampling, dict):
+        problems.append("metrics.sampling missing or not an object")
+    elif not isinstance(sampling.get("seed_deterministic"), bool):
+        problems.append("metrics.sampling.seed_deterministic must be a bool")
+    return problems
+
+
 def check_record(rec) -> list:
     problems = []
     if not isinstance(rec, dict):
@@ -137,6 +190,8 @@ def check_record(rec) -> list:
         problems += check_faults_record(rec)
     if rec.get("name") == "serve_engine_precision":
         problems += check_precision_record(rec)
+    if rec.get("name") == "serve_engine_speculative":
+        problems += check_speculative_record(rec)
     return problems
 
 
