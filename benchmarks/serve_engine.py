@@ -1,7 +1,7 @@
 """Unified serving engine benchmark: admission, schedulers, budgets, SLOs,
 and goodput under injected faults.
 
-Seven experiments — six through one `EngineCore`, the seventh through the
+Eight experiments — six through one `EngineCore`, the last two through the
 supervised multi-replica `Router`:
 
 * LM — ragged greedy generation with *mixed decode budgets*: run-to-completion
@@ -45,6 +45,11 @@ supervised multi-replica `Router`:
   a NaN-poisoned request retires ``'failed'`` with clean partials intact;
   a queue flood sheds overflow as ``'rejected'`` while high-priority work
   completes. Reports goodput under failure vs a fault-free fleet.
+* Fleet — the same LM trace through an in-process 2-replica fleet and a
+  2-worker *subprocess* fleet built from one wire-encodable `RunnerSpec`,
+  reporting per-router-step IPC overhead; a chaos pass SIGKILLs a worker
+  holding in-flight requests and asserts every request still completes
+  bit-identical to the fault-free in-process run.
 
 Both schedulers must return bit-identical outputs per request (asserted);
 only composition, latency and energy attribution may differ.
@@ -746,6 +751,113 @@ def bench_faults(smoke: bool) -> dict:
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Fleet: in-process replicas vs subprocess workers — IPC overhead + chaos
+# ---------------------------------------------------------------------------
+
+def bench_fleet(smoke: bool) -> dict:
+    """In-process 2-replica fleet vs 2-worker *subprocess* fleet on the
+    same LM trace, plus a chaos pass with one worker killed mid-run.
+
+    All three serving modes are built from one wire-encodable `RunnerSpec`
+    (same seed -> same params in every process), so the comparison is pure
+    transport: the subprocess fleet pays wire codec + pipe round trips per
+    router step, reported as per-step wall time against the in-process
+    fleet (``ipc_overhead_x``). The chaos pass kills a worker holding
+    in-flight requests with SIGKILL; supervision condemns the dead replica
+    and replays its work on the survivor. Acceptance (asserted): every
+    request in every mode completes ``'ok'`` with outputs *bit-identical*
+    to the fault-free in-process run.
+    """
+    from repro.serve.router import make_router, make_worker_fleet
+    from repro.serve.worker import build_runner, lm_spec
+
+    cfg = _lm_cfg()
+    tokens = 4 if smoke else 8
+    n_req = 4 if smoke else 6
+    spec = lm_spec(cfg, seed=0, max_seq=64)
+    config = EngineConfig(slots=2, max_queue=16)
+    rng = np.random.default_rng(9)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab,
+                                             size=rng.integers(2, 6))]
+               for _ in range(n_req)]
+    warm_prompt = [1, 2, 3]
+
+    def serve(router, *, timed_after_warmup=True):
+        if timed_after_warmup:      # compile jit caches outside the timing
+            router.submit(warm_prompt, max_new_tokens=tokens)
+            router.run_until_complete()
+        rids = [router.submit(p, max_new_tokens=tokens) for p in prompts]
+        t0 = time.perf_counter()
+        results = router.run_until_complete()
+        dt = time.perf_counter() - t0
+        return [results[rid] for rid in rids], dt, router.stats()
+
+    inproc = make_router(build_runner(spec), 2, config)
+    res_in, dt_in, stats_in = serve(inproc)
+    expected = [r.outputs for r in res_in]
+    assert all(r.status == "ok" for r in res_in)
+
+    t0 = time.perf_counter()
+    fleet = make_worker_fleet(spec, 2, config)
+    spawn_s = time.perf_counter() - t0
+    try:
+        res_sub, dt_sub, stats_sub = serve(fleet)
+    finally:
+        fleet.close()
+    assert [r.outputs for r in res_sub] == expected, (
+        "subprocess fleet outputs diverged from in-process fleet")
+
+    # chaos pass: SIGKILL a worker that is holding in-flight requests
+    chaos = make_worker_fleet(spec, 2, config)
+    try:
+        rids = [chaos.submit(p, max_new_tokens=tokens) for p in prompts]
+        for _ in range(2):
+            chaos.step()
+        victim = chaos.replicas[0].transport
+        assert victim.in_flight() > 0, "victim held no work before the kill"
+        victim.kill()
+        results = chaos.run_until_complete()
+        res_chaos = [results[rid] for rid in rids]
+        stats_chaos = chaos.stats()
+    finally:
+        chaos.close()
+    assert len(chaos.drain_log) == 1, chaos.drain_log
+    all_ok = all(r.status == "ok" for r in res_chaos)
+    bit_identical = [r.outputs for r in res_chaos] == expected
+    assert all_ok and bit_identical, (
+        "killed-worker replay diverged from the fault-free in-process run")
+
+    step_ms_in = 1e3 * dt_in / max(1, stats_in["router_steps"])
+    step_ms_sub = 1e3 * dt_sub / max(1, stats_sub["router_steps"])
+    rec = {
+        "name": "serve_engine_fleet",
+        "requests": n_req, "workers": 2, "tokens": tokens,
+        "inproc": {"wall_s": round(dt_in, 3),
+                   "router_steps": stats_in["router_steps"],
+                   "step_ms": round(step_ms_in, 3),
+                   "req_per_s": round(n_req / dt_in, 2)},
+        "subprocess": {"wall_s": round(dt_sub, 3),
+                       "router_steps": stats_sub["router_steps"],
+                       "step_ms": round(step_ms_sub, 3),
+                       "req_per_s": round(n_req / dt_sub, 2),
+                       "spawn_s": round(spawn_s, 3)},
+        "ipc_overhead_x": round(step_ms_sub / step_ms_in, 3),
+        "bit_identical": bit_identical,
+        "chaos": {"drains": len(chaos.drain_log),
+                  "rerouted": stats_chaos["rerouted"],
+                  "router_steps": stats_chaos["router_steps"],
+                  "all_ok": all_ok,
+                  "bit_identical": bit_identical},
+    }
+    emit("serve_engine_fleet", 0.0,
+         f"step {step_ms_in:.1f}ms inproc vs {step_ms_sub:.1f}ms subprocess "
+         f"({rec['ipc_overhead_x']}x), kill->replay rerouted="
+         f"{stats_chaos['rerouted']} bit_identical={bit_identical}",
+         **{k: v for k, v in rec.items() if k != "name"})
+    return rec
+
+
 def run(smoke: bool = False) -> dict:
     lm = bench_lm(smoke)
     snn = bench_snn(smoke)
@@ -754,10 +866,11 @@ def run(smoke: bool = False) -> dict:
     precision = bench_precision(smoke)
     speculative = bench_speculative(smoke)
     faults = bench_faults(smoke)
+    fleet = bench_fleet(smoke)
     record = {"name": "serve_engine", "lm": lm, "snn": snn,
               "chunked_prefill": chunked, "slo": slo,
               "precision": precision, "speculative": speculative,
-              "faults": faults}
+              "faults": faults, "fleet": fleet}
     print("SERVE_ENGINE_JSON " + json.dumps(record, sort_keys=True))
     append_result(record)
     return record

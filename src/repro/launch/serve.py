@@ -26,11 +26,17 @@
     # launch) with seed-deterministic nucleus sampling:
     PYTHONPATH=src python -m repro.launch.serve --workload lm \\
         --speculate 4 --temperature 0.8 --top-p 0.95 --seed 7
+
+    # multi-process fleet: 2 worker subprocesses (one EngineCore + runner
+    # each) supervised over the versioned wire protocol:
+    PYTHONPATH=src python -m repro.launch.serve --workload lm --workers 2
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
+from typing import Callable, List
 
 import jax
 
@@ -96,19 +102,28 @@ def print_fleet_report(core) -> None:
 
 
 def serve_lm(args) -> None:
-    from ..serve.runners.lm import LMRunner
-
     cfg = get_arch(args.arch)
     cfg = reduce_cfg(cfg, args).with_(frontend="", n_frontend_tokens=0)
-    params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
-    controller = None
-    if args.precision:
+    controller, runner = None, None
+    if args.workers > 0:
+        from ..serve.router import make_worker_fleet
+        from ..serve.worker import lm_spec
+        # every worker rebuilds params from the same wire-encodable spec
+        # (seed included), so re-routes after a worker death replay
+        # bit-identically and the parent never materialises the model
+        spec = lm_spec(cfg, seed=args.seed, max_seq=args.seq,
+                       quant_bits=4 if args.int4 else 0,
+                       speculate_k=args.speculate)
+        core = make_worker_fleet(spec, args.workers, engine_config(args))
+    elif args.precision:
         from ..serve.precision import make_lm_variants
+        params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
         core, controller = precision_engine(
             lambda: make_lm_variants(cfg, params, max_seq=args.seq),
             None, args)
-        runner = None
     else:
+        from ..serve.runners.lm import LMRunner
+        params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
         runner = LMRunner(cfg, params, max_seq=args.seq,
                           quant_bits=4 if args.int4 else 0,
                           speculate_k=args.speculate)
@@ -176,26 +191,33 @@ def serve_lm(args) -> None:
     print_fleet_report(core)
     if controller is not None:
         print(f"precision controller: {controller.summary()}")
+    if hasattr(core, "close"):                  # worker fleets need a reap
+        core.close()
 
 
 def serve_snn(args) -> None:
-    import dataclasses
-
     from ..configs import vgg9_snn
-    from ..models.vgg9 import init_vgg9
-    from ..serve.runners.snn import SNNRunner
 
     cfg = vgg9_snn.TINY_INT4 if args.int4 else vgg9_snn.TINY
     if args.img_hw:
         cfg = dataclasses.replace(cfg, img_hw=args.img_hw)
-    params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
     controller = None
-    if args.precision:
+    if args.workers > 0:
+        from ..serve.router import make_worker_fleet
+        from ..serve.worker import snn_spec
+        core = make_worker_fleet(snn_spec(cfg, seed=args.seed),
+                                 args.workers, engine_config(args))
+    elif args.precision:
+        from ..models.vgg9 import init_vgg9
         from ..serve.precision import make_snn_pricer, make_snn_variants
+        params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
         core, controller = precision_engine(
             lambda: make_snn_variants(cfg, params, interpret=True),
             make_snn_pricer(cfg), args)
     else:
+        from ..models.vgg9 import init_vgg9
+        from ..serve.runners.snn import SNNRunner
+        params = init_vgg9(jax.random.PRNGKey(args.seed), cfg)
         runner = SNNRunner(cfg, params, interpret=True)
         core = build_engine(runner, args)
 
@@ -243,6 +265,90 @@ def serve_snn(args) -> None:
         print(f"precision controller: {controller.summary()}")
     if hasattr(core, "admission_log"):          # single engine, not a fleet
         print(f"admissions: {core.admission_log}")
+    if hasattr(core, "close"):                  # worker fleets need a reap
+        core.close()
+
+
+@dataclasses.dataclass(frozen=True)
+class FlagRule:
+    """One CLI compatibility constraint: ``when(args)`` true => reject the
+    invocation with ``error``. `FLAG_RULES` below *is* the compatibility
+    policy — a data table unit tests iterate directly
+    (tests/test_launch_flags.py) instead of an opaque if/ap.error chain."""
+
+    name: str
+    when: Callable
+    error: str
+
+
+def _sampling(a) -> bool:
+    return a.temperature > 0 or a.top_k > 0 or a.top_p < 1.0
+
+
+FLAG_RULES = (
+    FlagRule("replicas-range", lambda a: a.replicas < 1,
+             "--replicas must be >= 1"),
+    FlagRule("workers-range", lambda a: a.workers < 0,
+             "--workers must be >= 0 (0 = in-process serving)"),
+    FlagRule("slo-needs-continuous",
+             lambda a: a.slo_ms > 0 and a.admission == "batch",
+             "--slo-ms requires --admission continuous "
+             "(deadlines are step-level; the batch path ignores them)"),
+    FlagRule("slo-vs-fleet",
+             lambda a: a.slo_ms > 0 and (a.replicas > 1 or a.fault_plan),
+             "--slo-ms is a wall-clock SLO; the replica router runs on "
+             "a deterministic tick clock (drop --replicas/--fault-plan, "
+             "or use deadline-free requests with the fleet)"),
+    FlagRule("precision-vs-int4", lambda a: a.precision and a.int4,
+             "--int4 pins numerics at runner construction; with "
+             "--precision the engine holds both variants (use "
+             "--precision int4 for a pinned int4 fleet)"),
+    FlagRule("precision-vs-fleet",
+             lambda a: a.precision and (a.replicas > 1 or a.fault_plan),
+             "--precision builds a single controller-bound engine; "
+             "drop --replicas/--fault-plan"),
+    FlagRule("lm-only-knobs",
+             lambda a: (a.speculate or _sampling(a)) and a.workload != "lm",
+             "--speculate/--temperature/--top-k/--top-p are LM-only"),
+    FlagRule("sampling-needs-continuous",
+             lambda a: (a.speculate or _sampling(a))
+             and a.admission == "batch",
+             "--speculate and sampling need --admission continuous "
+             "(the run-to-completion batch path is greedy-only)"),
+    FlagRule("speculate-vs-precision",
+             lambda a: a.speculate and a.precision,
+             "--speculate drafts against one resident KV cache; the "
+             "--precision variant registry swaps runners per request "
+             "(drop one of the two)"),
+    FlagRule("workers-vs-replicas",
+             lambda a: a.workers > 0 and a.replicas > 1,
+             "--workers and --replicas are both fleet sizes (subprocess "
+             "vs in-process replicas); pick one"),
+    FlagRule("workers-vs-fault-plan",
+             lambda a: a.workers > 0 and bool(a.fault_plan),
+             "--fault-plan injects faults into in-process replicas; "
+             "subprocess workers are chaos-tested by killing the process, "
+             "not by injection"),
+    FlagRule("workers-vs-precision",
+             lambda a: a.workers > 0 and bool(a.precision),
+             "--precision builds a single controller-bound engine; it "
+             "does not serve through subprocess workers"),
+    FlagRule("workers-vs-slo",
+             lambda a: a.workers > 0 and a.slo_ms > 0,
+             "--slo-ms deadlines are stamped on each worker's own wall "
+             "clock at submit; cross-process SLO accounting is not "
+             "supported (drop one of the two)"),
+    FlagRule("workers-vs-data-shard",
+             lambda a: a.workers > 0 and a.data_shard > 1,
+             "--data-shard builds a device mesh in this process; workers "
+             "serve from their own processes (shard inside a worker is "
+             "not wired up)"),
+)
+
+
+def check_flags(args) -> List[FlagRule]:
+    """Every violated `FlagRule` for this namespace (empty = accepted)."""
+    return [rule for rule in FLAG_RULES if rule.when(args)]
 
 
 def main():
@@ -296,6 +402,12 @@ def main():
                          "'0=wedge@4,1=nan@6:slot=0' (kinds: wedge, slow, "
                          "raise, nan, flood). Implies the router path even "
                          "with --replicas 1")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="serve through N worker *subprocesses* (one "
+                         "EngineCore + runner each, supervised over the "
+                         "versioned wire protocol; a killed worker's "
+                         "in-flight requests replay elsewhere "
+                         "bit-identically). 0 serves in-process")
     ap.add_argument("--speculate", type=int, default=0, metavar="K",
                     help="LM: speculative decode — draft up to K tokens per "
                          "pure-decode row via n-gram prompt lookup and "
@@ -314,32 +426,8 @@ def main():
                          "(a ('data',) mesh; needs the devices to exist)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.slo_ms > 0 and args.admission == "batch":
-        ap.error("--slo-ms requires --admission continuous "
-                 "(deadlines are step-level; the batch path ignores them)")
-    if args.replicas < 1:
-        ap.error("--replicas must be >= 1")
-    if args.slo_ms > 0 and (args.replicas > 1 or args.fault_plan):
-        ap.error("--slo-ms is a wall-clock SLO; the replica router runs on "
-                 "a deterministic tick clock (drop --replicas/--fault-plan, "
-                 "or use deadline-free requests with the fleet)")
-    if args.precision and args.int4:
-        ap.error("--int4 pins numerics at runner construction; with "
-                 "--precision the engine holds both variants (use "
-                 "--precision int4 for a pinned int4 fleet)")
-    if args.precision and (args.replicas > 1 or args.fault_plan):
-        ap.error("--precision builds a single controller-bound engine; "
-                 "drop --replicas/--fault-plan")
-    sampling = args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
-    if (args.speculate or sampling) and args.workload != "lm":
-        ap.error("--speculate/--temperature/--top-k/--top-p are LM-only")
-    if (args.speculate or sampling) and args.admission == "batch":
-        ap.error("--speculate and sampling need --admission continuous "
-                 "(the run-to-completion batch path is greedy-only)")
-    if args.speculate and args.precision:
-        ap.error("--speculate drafts against one resident KV cache; the "
-                 "--precision variant registry swaps runners per request "
-                 "(drop one of the two)")
+    for rule in check_flags(args):
+        ap.error(rule.error)
 
     if args.workload == "snn":
         serve_snn(args)

@@ -1,30 +1,39 @@
-"""Unified serving: one engine core, pluggable LM and SNN runners, and a
-fault-tolerant multi-replica router.
+"""Unified serving: one engine core, pluggable LM and SNN runners, a
+fault-tolerant multi-replica router, and a versioned wire protocol for
+running replicas as worker subprocesses.
 
-See README.md in this directory for the Request/Result/Runner API and the
-failure model.
+See README.md in this directory for the Request/Result/Runner API, the
+failure model, and the process-fleet deployment mode.
 """
 from .api import (EngineConfig, EngineStalled, ModelRunner, PAD_REQUEST_ID,
-                  QueueFull, Request, Result, RunnerSession, SlotProgress,
-                  StepBudget, StepReport)
+                  QueueFull, Request, RequestOptions, Result, RunnerSession,
+                  SlotProgress, StepBudget, StepReport, SubmitSpec,
+                  validate_options)
 from .core import EngineCore, StepClock, all_finite
 from .faults import (Fault, FaultError, FaultPlan, FaultyRunner, TickClock,
                      flood_queue, parse_fleet_plan)
 from .precision import (PrecisionController, PrecisionDecision,
                         PrecisionRunner, VariantRegistry, bind_controller,
                         make_lm_variants, make_snn_pricer, make_snn_variants)
-from .router import Router, make_router
+from .router import (InProcTransport, Router, Transport, TransportError,
+                     make_router, make_worker_fleet)
 from .scheduler import (FIFOScheduler, Scheduler, SLOScheduler,
                         SparsityAwareScheduler, make_scheduler)
+from .wire import PROTOCOL_VERSION, ProtocolError
+from .worker import RunnerSpec, SubprocessTransport, WorkerDied, build_runner
 
 __all__ = [
     "EngineConfig", "EngineCore", "EngineStalled", "FIFOScheduler", "Fault",
-    "FaultError", "FaultPlan", "FaultyRunner", "ModelRunner",
-    "PAD_REQUEST_ID", "PrecisionController", "PrecisionDecision",
-    "PrecisionRunner", "QueueFull", "Request", "Result", "Router",
-    "RunnerSession", "SLOScheduler", "Scheduler", "SlotProgress",
-    "SparsityAwareScheduler", "StepBudget", "StepClock", "StepReport",
-    "TickClock", "VariantRegistry", "all_finite", "bind_controller",
-    "flood_queue", "make_lm_variants", "make_router", "make_scheduler",
-    "make_snn_pricer", "make_snn_variants", "parse_fleet_plan",
+    "FaultError", "FaultPlan", "FaultyRunner", "InProcTransport",
+    "ModelRunner", "PAD_REQUEST_ID", "PROTOCOL_VERSION",
+    "PrecisionController", "PrecisionDecision", "PrecisionRunner",
+    "ProtocolError", "QueueFull", "Request", "RequestOptions", "Result",
+    "Router", "RunnerSession", "RunnerSpec", "SLOScheduler", "Scheduler",
+    "SlotProgress", "SparsityAwareScheduler", "StepBudget", "StepClock",
+    "StepReport", "SubmitSpec", "SubprocessTransport", "TickClock",
+    "Transport", "TransportError", "VariantRegistry", "WorkerDied",
+    "all_finite", "bind_controller", "build_runner", "flood_queue",
+    "make_lm_variants", "make_router", "make_scheduler", "make_snn_pricer",
+    "make_snn_variants", "make_worker_fleet", "parse_fleet_plan",
+    "validate_options",
 ]

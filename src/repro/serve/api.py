@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from typing import (Any, Hashable, Mapping, Optional, Protocol, Sequence,
-                    runtime_checkable)
+                    Tuple, runtime_checkable)
 
 # Request id used for the filler requests that pad a batch to the full slot
 # count. Results for pad slots are dropped by the engine, never surfaced.
@@ -72,6 +72,153 @@ class Request:
         if self.deadline_s is None:
             return None
         return self.arrival_s + self.deadline_s
+
+
+def _is_int(value: Any) -> bool:
+    return isinstance(value, int) and not isinstance(value, bool)
+
+
+def _is_num(value: Any) -> bool:
+    return isinstance(value, (int, float)) and not isinstance(value, bool)
+
+
+#: validator table for every option key any layer of the stack reads.
+#: (predicate, human-readable expectation) — the single place a new
+#: per-request knob gets registered so it is accepted at submit() and at
+#: the wire boundary.
+OPTION_SPECS: Mapping[str, Any] = {
+    # LM decode budget
+    "max_new_tokens": (lambda v: _is_int(v) and v >= 0, "int >= 0"),
+    # sampling layer (serve.sampling.SamplingParams)
+    "temperature": (lambda v: _is_num(v) and v >= 0.0, "number >= 0"),
+    "top_k": (lambda v: _is_int(v) and v >= 0, "int >= 0"),
+    "top_p": (lambda v: _is_num(v) and 0.0 < v <= 1.0, "number in (0, 1]"),
+    "seed": (lambda v: _is_int(v), "int"),
+    "logprobs": (lambda v: isinstance(v, bool), "bool"),
+    # precision control (serve.precision)
+    "pin_precision": (lambda v: v in ("fp32", "int4"),
+                      "'fp32' or 'int4'"),
+    # scheduler hints (serve.scheduler)
+    "source": (lambda v: isinstance(v, str), "str"),
+    "skip_hint": (lambda v: _is_num(v) and 0.0 <= v <= 1.0,
+                  "number in [0, 1]"),
+}
+
+#: option keys that opt a request into the sampling path (mirrors
+#: `serve.sampling.OPTION_KEYS`; asserted equal there)
+SAMPLING_OPTION_KEYS = ("temperature", "top_k", "top_p", "seed", "logprobs")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOptions:
+    """Validated view of `Request.options`, parsed once at the submit
+    boundary.
+
+    Sampling, speculation, precision and the schedulers all read raw
+    option dicts; before this class each consumed its keys ad-hoc, so a
+    typo'd or ill-typed option surfaced (if ever) mid-step, deep inside a
+    runner. `parse` is the single choke point: `EngineCore.submit`,
+    `Router.submit` and the wire boundary (`serve.worker`) all call it, so
+    unknown keys and ill-typed values fail *at submission* with a message
+    naming the key — and a request that made it into the queue is known
+    parseable by every downstream consumer.
+
+    ``present`` records which keys the caller actually passed. That
+    preservation matters: `serve.sampling.SamplingParams.from_options`
+    returns None when *no* sampling key was passed (the zero-cost greedy
+    path that never fetches logits), so "absent" and "present with the
+    default value" are observably different requests.
+    """
+    max_new_tokens: int = 0
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    logprobs: bool = False
+    pin_precision: Optional[str] = None
+    source: Optional[str] = None
+    skip_hint: Optional[float] = None
+    present: Tuple[str, ...] = ()
+
+    KEYS = tuple(OPTION_SPECS)
+
+    @classmethod
+    def parse(cls, options: Optional[Mapping[str, Any]]) -> "RequestOptions":
+        """Validate a raw option mapping; raises ValueError on unknown
+        keys or ill-typed/out-of-range values."""
+        options = options or {}
+        unknown = sorted(set(options) - set(OPTION_SPECS))
+        if unknown:
+            raise ValueError(
+                f"unknown request option(s) {unknown}; known options: "
+                f"{sorted(OPTION_SPECS)}")
+        for key, value in options.items():
+            ok, expect = OPTION_SPECS[key]
+            if not ok(value):
+                raise ValueError(
+                    f"request option {key!r}={value!r} invalid: expected "
+                    f"{expect}")
+        fields = {k: options[k] for k in options}
+        # numeric knobs normalize to their canonical python type
+        if "temperature" in fields:
+            fields["temperature"] = float(fields["temperature"])
+        if "top_p" in fields:
+            fields["top_p"] = float(fields["top_p"])
+        if "skip_hint" in fields:
+            fields["skip_hint"] = float(fields["skip_hint"])
+        return cls(present=tuple(sorted(options)), **fields)
+
+    @property
+    def sampling(self):
+        """`serve.sampling.SamplingParams` when any sampling key was
+        present, else None — the `SamplingParams.from_options` contract,
+        ported here so the opt-in semantics live with the validation."""
+        if not any(k in self.present for k in SAMPLING_OPTION_KEYS):
+            return None
+        from .sampling import SamplingParams
+        return SamplingParams(temperature=self.temperature, top_k=self.top_k,
+                              top_p=self.top_p, seed=self.seed,
+                              logprobs=self.logprobs)
+
+
+def validate_options(options: Optional[Mapping[str, Any]]) -> Mapping[str, Any]:
+    """Validate and return ``options`` (convenience over
+    `RequestOptions.parse` for call sites that keep the raw mapping)."""
+    RequestOptions.parse(options)
+    return dict(options or {})
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitSpec:
+    """The one canonical submit shape.
+
+    `EngineCore.submit` and `Router.submit` used to duplicate the same
+    ``(payload, *, deadline_s, priority, **options)`` kwarg list; both now
+    parse into this spec, and the wire `SubmitMsg` serializes exactly
+    these fields — one shape for in-process calls, the router's replay
+    log, and the subprocess control plane.
+    """
+    payload: Any
+    deadline_s: Optional[float] = None
+    priority: int = 0
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def make(cls, payload: Any, *, deadline_s: Optional[float] = None,
+             priority: int = 0, options: Optional[Mapping[str, Any]] = None,
+             **extra: Any) -> "SubmitSpec":
+        """Build + validate a spec from the submit kwarg surface. Option
+        keys may come as an explicit ``options=`` mapping, as loose
+        keyword arguments, or both (loose kwargs win on conflict)."""
+        merged = dict(options or {})
+        merged.update(extra)
+        if deadline_s is not None:
+            deadline_s = float(deadline_s)
+            if deadline_s < 0:
+                raise ValueError(f"deadline_s {deadline_s} < 0")
+        return cls(payload=payload, deadline_s=deadline_s,
+                   priority=int(priority),
+                   options=validate_options(merged))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -69,7 +69,8 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 import numpy as np
 
 from .api import (EngineConfig, EngineStalled, ModelRunner, QueueFull,
-                  Request, Result, RunnerSession, SlotProgress, StepBudget)
+                  Request, Result, RunnerSession, SlotProgress, StepBudget,
+                  SubmitSpec)
 from .scheduler import Scheduler, make_scheduler
 
 
@@ -204,18 +205,30 @@ class EngineCore:
                priority: int = 0, **options: Any) -> int:
         """Admit one request; returns its id. Raises `QueueFull` at capacity.
 
+        The kwarg surface parses into one canonical `api.SubmitSpec`
+        (shared verbatim by `Router.submit` and the wire `SubmitMsg`);
+        unknown or ill-typed option keys raise ValueError *here*, at the
+        submit boundary, not mid-step inside a runner.
+
         deadline_s: optional latency SLO in engine-clock seconds from now —
         the request is retired with ``status='expired'`` if it has not
         completed by then. priority: admission tie-break for deadline-aware
         schedulers (higher wins).
         """
+        return self.submit_spec(SubmitSpec.make(
+            payload, deadline_s=deadline_s, priority=priority, **options))
+
+    def submit_spec(self, spec: SubmitSpec) -> int:
+        """Admit one already-validated `api.SubmitSpec` (the primitive
+        `submit` wraps; transports call this directly)."""
         if len(self._queue) >= self.config.max_queue:
             raise QueueFull(
                 f"admission queue at capacity ({self.config.max_queue})")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, payload, dict(options),
-                                   deadline_s=deadline_s, priority=priority,
+        self._queue.append(Request(rid, spec.payload, dict(spec.options),
+                                   deadline_s=spec.deadline_s,
+                                   priority=spec.priority,
                                    arrival_s=self._clock()))
         return rid
 

@@ -40,20 +40,124 @@ The router speaks the same request surface as a single engine (`submit` /
 drivers like `launch/serve.py --replicas N` swap it in transparently.
 Fault schedules for chaos tests/benches come from `serve.faults`
 (`make_router(..., plans=...)` wraps each replica in a `FaultyRunner`).
+
+**Transports.** The router never talks to an `EngineCore` directly any
+more — it talks to a `Transport`, the seam that makes supervision
+deployment-agnostic. `InProcTransport` wraps an in-process engine
+bit-identically (the default: `make_router` fleets behave exactly as
+before), and `serve.worker.SubprocessTransport` speaks the versioned wire
+protocol (`serve.wire`) to an engine hosted in a worker subprocess
+(`make_worker_fleet`, `launch/serve.py --workers N`). Every health probe
+above reads transport methods (`progress_marker`, `failed_count`,
+`cost_finite`) that in-process delegate to engine internals and over the
+wire come from `HeartbeatMsg` piggybacked on step replies — so stall
+detection, the NaN probe and drain + deterministic-replay re-route work
+unchanged when a worker hangs or dies outright: a dead pipe raises
+`TransportError` from `step()`/`submit_spec()`, which condemns the replica
+exactly like an in-process step fault.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Set
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
+                    Sequence, Set, Tuple, runtime_checkable)
 
 from .api import (EngineConfig, EngineStalled, ModelRunner, QueueFull,
-                  Request, Result)
+                  Request, Result, SubmitSpec)
 from .core import EngineCore, all_finite
 from .faults import FaultPlan, FaultyRunner, TickClock
 
 #: replica lifecycle: healthy -> (wedged | poisoned) -> drained
 HEALTHY, WEDGED, POISONED, DRAINED = "healthy", "wedged", "poisoned", "drained"
+
+
+class TransportError(RuntimeError):
+    """A transport lost its replica (dead worker, broken pipe, timed-out
+    step). Raised from `Transport.step`/`submit_spec`; the router responds
+    by condemning the replica and re-routing its in-flight requests, the
+    same path an in-process step exception takes."""
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What the router needs from a replica, wherever it lives.
+
+    The probe surface is exactly the supervision contract: a cumulative
+    progress marker (retired, work_units, decode_tokens, queue_len), the
+    numerics-screen failure count, and whether the last step's cost was
+    finite. In-process these read engine internals; over the wire they are
+    the `serve.wire.HeartbeatMsg` fields.
+    """
+
+    #: clock the replica stamps deadlines on (the router adopts the first
+    #: replica's clock when none is passed)
+    clock: Callable[[], float]
+
+    def submit_spec(self, spec: SubmitSpec) -> int: ...
+    def poll(self, request_id: int) -> Optional[Result]: ...
+    def poll_partial(self, request_id: int) -> List[Any]: ...
+    def cancel(self, request_id: int, *, status: str = "cancelled") -> bool: ...
+    def step(self) -> None: ...
+    def progress_marker(self) -> Tuple[int, int, int, int]: ...
+    def failed_count(self) -> int: ...
+    def cost_finite(self) -> bool: ...
+    def in_flight(self) -> int: ...
+    def pending(self) -> int: ...
+    def stats(self) -> Dict[str, Any]: ...
+    def max_idle_steps(self) -> int: ...
+    def close(self) -> None: ...
+
+
+class InProcTransport:
+    """`Transport` over an in-process `EngineCore` — the default deployment
+    mode, bit-identical to the pre-seam router (every method is a direct
+    delegation; no serialization, no copies). The wrapped engine stays
+    reachable as ``.core`` for tests and schedulers that introspect slots."""
+
+    def __init__(self, core: EngineCore):
+        self.core = core
+        self.clock = core._clock
+
+    def submit_spec(self, spec: SubmitSpec) -> int:
+        return self.core.submit_spec(spec)
+
+    def poll(self, request_id: int) -> Optional[Result]:
+        return self.core.poll(request_id)
+
+    def poll_partial(self, request_id: int) -> List[Any]:
+        return self.core.poll_partial(request_id)
+
+    def cancel(self, request_id: int, *, status: str = "cancelled") -> bool:
+        return self.core.cancel(request_id, status=status)
+
+    def step(self) -> None:
+        self.core.step()
+
+    def progress_marker(self) -> Tuple[int, int, int, int]:
+        return self.core._progress_marker()
+
+    def failed_count(self) -> int:
+        return self.core._failed
+
+    def cost_finite(self) -> bool:
+        report = self.core.last_report
+        return report is None or all_finite(report.cost)
+
+    def in_flight(self) -> int:
+        return self.core.in_flight()
+
+    def pending(self) -> int:
+        return self.core.pending()
+
+    def stats(self) -> Dict[str, Any]:
+        return self.core.stats()
+
+    def max_idle_steps(self) -> int:
+        return self.core.config.max_idle_steps
+
+    def close(self) -> None:
+        pass
 
 
 def _est_units(payload: Any, options: Mapping[str, Any]) -> int:
@@ -82,11 +186,12 @@ class _Tracked:
 
 
 class _Replica:
-    """One supervised `EngineCore` and its health bookkeeping."""
+    """One supervised replica (behind a `Transport`) and its health
+    bookkeeping."""
 
-    def __init__(self, idx: int, core: EngineCore):
+    def __init__(self, idx: int, transport: Any):
         self.idx = idx
-        self.core = core
+        self.transport = transport
         self.state = HEALTHY
         self.condition: Optional[str] = None    # why it left HEALTHY
         self.reason: Optional[str] = None
@@ -94,8 +199,15 @@ class _Replica:
         self.placed: Dict[int, int] = {}        # local rid -> router rid
         self.sec_per_unit = 1.0                 # EWMA, placement cost prior
 
+    @property
+    def core(self) -> Optional[EngineCore]:
+        """The in-process engine, when there is one (`InProcTransport`);
+        None for subprocess replicas. Tests and in-proc tooling reach
+        through this."""
+        return getattr(self.transport, "core", None)
+
     def busy(self) -> bool:
-        return self.core.in_flight() > 0 or self.core.pending() > 0
+        return self.transport.in_flight() > 0 or self.transport.pending() > 0
 
 
 class Router:
@@ -120,15 +232,17 @@ class Router:
                     `core.StepClock`); 0 leaves the clock alone.
     """
 
-    def __init__(self, replicas: Sequence[EngineCore], *,
+    def __init__(self, replicas: Sequence[Any], *,
                  clock: Optional[Callable[[], float]] = None,
                  wedge_patience: int = 3, stall_factor: float = 8.0,
                  stall_seconds: Optional[float] = None,
                  max_retries: int = 2, max_waiting: int = 64,
                  tick_s: float = 0.0):
         assert replicas, "router needs at least one replica"
-        self.replicas = [_Replica(i, core) for i, core in enumerate(replicas)]
-        self._clock = clock if clock is not None else replicas[0]._clock
+        transports = [r if not isinstance(r, EngineCore) else InProcTransport(r)
+                      for r in replicas]
+        self.replicas = [_Replica(i, t) for i, t in enumerate(transports)]
+        self._clock = clock if clock is not None else transports[0].clock
         self.wedge_patience = max(1, wedge_patience)
         self.stall_factor = stall_factor
         self.stall_seconds = stall_seconds
@@ -160,15 +274,28 @@ class Router:
                **options: Any) -> int:
         """Admit one request to the fleet; returns its router-scoped id.
 
+        The kwarg surface is `EngineCore.submit`'s exactly (one shared
+        `api.SubmitSpec` shape; unknown/ill-typed options raise here) plus
+        ``affinity`` — a routing concern, not a request option, so it stays
+        a first-class router kwarg.
+
         Never raises `QueueFull`: overload parks the request in the backoff
         line and, past ``max_waiting``, sheds by priority with
         ``status='rejected'`` (see class docstring)."""
+        return self.submit_spec(
+            SubmitSpec.make(payload, deadline_s=deadline_s,
+                            priority=priority, **options),
+            affinity=affinity)
+
+    def submit_spec(self, spec: SubmitSpec, *,
+                    affinity: Optional[Any] = None) -> int:
+        """Admit one already-validated `api.SubmitSpec` to the fleet."""
         rid = self._next_id
         self._next_id += 1
         now = self._clock()
         self._requests[rid] = _Tracked(
-            rid, payload, dict(options), priority,
-            None if deadline_s is None else now + deadline_s,
+            rid, spec.payload, dict(spec.options), spec.priority,
+            None if spec.deadline_s is None else now + spec.deadline_s,
             affinity, self.max_retries)
         self._outstanding.add(rid)
         self._try_place(rid)
@@ -203,10 +330,10 @@ class Router:
         replica = self.replicas[idx]
         local = next(l for l, r in replica.placed.items() if r == request_id)
         self._drain_partials(replica)
-        if not replica.core.cancel(local):
+        if not replica.transport.cancel(local):
             return False
         del replica.placed[local]
-        res = replica.core.poll(local)
+        res = replica.transport.poll(local)
         self._finish(request_id,
                      res if res is not None
                      else Result(request_id, None, {}, "cancelled"))
@@ -235,7 +362,7 @@ class Router:
                 return self.replicas[pinned]
         est = _est_units(tracked.payload, tracked.options)
         best = min(healthy, key=lambda r: (
-            (self._outstanding_units(r) + r.core.pending() + est)
+            (self._outstanding_units(r) + r.transport.pending() + est)
             * r.sec_per_unit, r.idx))
         if tracked.affinity is not None:
             self._affinity[tracked.affinity] = best.idx
@@ -258,16 +385,23 @@ class Router:
             return False
         deadline_s = (None if tracked.deadline_at is None
                       else tracked.deadline_at - now)
+        # options were validated at Router.submit; the replay spec skips
+        # re-parsing (plain constructor) so a re-route can never be rejected
+        spec = SubmitSpec(payload=tracked.payload, deadline_s=deadline_s,
+                          priority=tracked.priority, options=tracked.options)
         try:
-            local = replica.core.submit(tracked.payload,
-                                        deadline_s=deadline_s,
-                                        priority=tracked.priority,
-                                        **tracked.options)
+            local = replica.transport.submit_spec(spec)
         except QueueFull:
             tracked.attempts += 1
             self._waiting[rid] = self._step_idx + 2 ** (tracked.attempts - 1)
             self._shed_overflow()
             return False
+        except TransportError as e:
+            # the worker died between supervision steps; condemn it now and
+            # place the request elsewhere (the replica is no longer healthy,
+            # so the recursion is bounded by the fleet size)
+            self._condemn(replica, WEDGED, f"transport failed at submit: {e}")
+            return self._try_place(rid)
         self._waiting.pop(rid, None)
         replica.placed[local] = rid
         self._placement[rid] = replica.idx
@@ -304,11 +438,11 @@ class Router:
             if not replica.busy():
                 replica.idle_steps = 0
                 continue
-            marker0 = replica.core._progress_marker()
-            failed0 = replica.core._failed
+            marker0 = replica.transport.progress_marker()
+            failed0 = replica.transport.failed_count()
             t0 = self._clock()
             try:
-                replica.core.step()
+                replica.transport.step()
             except Exception as e:          # mid-step fault: condemn replica
                 self._condemn(replica, WEDGED, f"step raised: {e!r}")
                 continue
@@ -316,9 +450,8 @@ class Router:
             self._drain_partials(replica)
             self._collect_results(replica)
             self._learn_cost(replica, marker0, dt)
-            if replica.core._failed > failed0 or (
-                    replica.core.last_report is not None
-                    and not all_finite(replica.core.last_report.cost)):
+            if replica.transport.failed_count() > failed0 or (
+                    not replica.transport.cost_finite()):
                 self._condemn(replica, POISONED,
                               "numerics screen tripped on step outputs")
                 continue
@@ -327,7 +460,7 @@ class Router:
                               f"step took {dt:.3f}s vs fleet baseline "
                               f"{self._fastest_dt}")
                 continue
-            if replica.core._progress_marker() == marker0 and replica.busy():
+            if replica.transport.progress_marker() == marker0 and replica.busy():
                 replica.idle_steps += 1
                 if replica.idle_steps >= self.wedge_patience:
                     self._condemn(replica, WEDGED,
@@ -338,7 +471,7 @@ class Router:
         return sum(self._counts.values()) - finished_before
 
     def _learn_cost(self, replica: _Replica, marker0, dt: float) -> None:
-        units = replica.core._progress_marker()[1] - marker0[1]
+        units = replica.transport.progress_marker()[1] - marker0[1]
         if dt > 0:
             self._fastest_dt = dt if self._fastest_dt is None \
                 else min(self._fastest_dt, dt)
@@ -356,7 +489,7 @@ class Router:
 
     def _drain_partials(self, replica: _Replica) -> None:
         for local, rid in list(replica.placed.items()):
-            items = replica.core.poll_partial(local)
+            items = replica.transport.poll_partial(local)
             if not items:
                 continue
             tracked = self._requests.get(rid)
@@ -374,7 +507,7 @@ class Router:
 
     def _collect_results(self, replica: _Replica) -> None:
         for local, rid in list(replica.placed.items()):
-            res = replica.core.poll(local)
+            res = replica.transport.poll(local)
             if res is None:
                 continue
             del replica.placed[local]
@@ -393,10 +526,11 @@ class Router:
         for local, rid in list(replica.placed.items()):
             tracked = self._requests.get(rid)
             # reclaim the slot/queue entry; the inner session is clean, so
-            # this cannot disturb anything else on the replica
-            replica.core.cancel(local)
+            # this cannot disturb anything else on the replica (a dead
+            # transport returns False/None here — nothing left to salvage)
+            replica.transport.cancel(local)
             self._drain_partials(replica)
-            salvage = replica.core.poll(local)
+            salvage = replica.transport.poll(local)
             del replica.placed[local]
             self._placement.pop(rid, None)
             if tracked is None:
@@ -437,7 +571,7 @@ class Router:
         fleet-wide progress (default: the first replica's configured
         guard) — possible only if supervision itself cannot retire the
         stuck work (e.g. the guard is set too tight)."""
-        limit = (self.replicas[0].core.config.max_idle_steps
+        limit = (self.replicas[0].transport.max_idle_steps()
                  if max_idle_steps is None else max_idle_steps)
         idle = 0
         while self._outstanding:
@@ -458,7 +592,7 @@ class Router:
 
     def _fleet_marker(self) -> tuple:
         return (sum(self._counts.values()), len(self._waiting),
-                tuple(r.core._progress_marker() for r in self.replicas),
+                tuple(r.transport.progress_marker() for r in self.replicas),
                 tuple(r.state for r in self.replicas))
 
     # -- introspection -------------------------------------------------------
@@ -472,7 +606,7 @@ class Router:
                 "condition": r.condition,
                 "reason": r.reason,
                 "sec_per_unit": r.sec_per_unit,
-                "stats": r.core.stats(),
+                "stats": r.transport.stats(),
             } for r in self.replicas],
             "healthy": len(self._healthy()),
             "rerouted": self._rerouted,
@@ -483,6 +617,12 @@ class Router:
                for status in ("ok", "cancelled", "expired", "failed",
                               "rejected")},
         }
+
+    def close(self) -> None:
+        """Release every replica's transport (terminates subprocess
+        workers; a no-op for in-process fleets)."""
+        for replica in self.replicas:
+            replica.transport.close()
 
 
 def make_router(runner: ModelRunner, n: int,
@@ -509,3 +649,30 @@ def make_router(runner: ModelRunner, n: int,
     if owned:
         router_kwargs.setdefault("tick_s", 1.0)
     return Router(cores, clock=clock, **router_kwargs)
+
+
+def make_worker_fleet(spec: Any, n: int,
+                      config: EngineConfig = EngineConfig(), *,
+                      step_timeout_s: float = 120.0,
+                      **router_kwargs) -> Router:
+    """Build an N-worker *subprocess* fleet: one `serve.worker` process per
+    replica, each hosting its own `EngineCore` + runner built from the
+    wire-encodable ``spec`` (`serve.worker.RunnerSpec`), supervised over
+    the versioned wire protocol.
+
+    Workers run on wall clocks (each stamps deadlines on its own
+    ``time.monotonic``; the router forwards *remaining* deadline seconds,
+    so absolute deadlines survive re-routes). The relative stall-ratio
+    probe is disabled by default — a worker's first step jit-compiles, so
+    honest wall-clock variance would trip ``stall_factor`` — while the
+    heartbeat progress probe, the NaN probe, and dead-pipe detection
+    (`TransportError` -> condemn -> replay) carry the supervision load.
+    Pass ``stall_seconds`` for an absolute hang bound below the
+    transport's own ``step_timeout_s``.
+    """
+    from .worker import SubprocessTransport
+    transports = [SubprocessTransport(spec, config,
+                                      step_timeout_s=step_timeout_s)
+                  for _ in range(n)]
+    router_kwargs.setdefault("stall_factor", float("inf"))
+    return Router(transports, **router_kwargs)

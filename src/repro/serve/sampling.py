@@ -93,14 +93,30 @@ class SamplingParams:
     @classmethod
     def from_options(cls, options: Mapping) -> Optional["SamplingParams"]:
         """Parse request options; None when the request never opted in
-        (pure greedy decode, no logprob tracking — the zero-cost default)."""
+        (pure greedy decode, no logprob tracking — the zero-cost default).
+
+        Ported onto the validated `api.RequestOptions` surface: parsing
+        happens at the submit boundary's rules (unknown sampling values
+        raise there, not here), and this is now just the opt-in view.
+        """
         if not any(k in options for k in cls.KEYS):
             return None
-        return cls(temperature=float(options.get("temperature", 0.0)),
-                   top_k=int(options.get("top_k", 0)),
-                   top_p=float(options.get("top_p", 1.0)),
-                   seed=int(options.get("seed", 0)),
-                   logprobs=bool(options.get("logprobs", False)))
+        from .api import RequestOptions
+        parsed = RequestOptions.parse(
+            {k: v for k, v in options.items() if k in cls.KEYS})
+        return parsed.sampling
+
+
+def _check_option_key_registry():
+    # the submit-boundary validator (api.OPTION_SPECS) must know every key
+    # this layer reads, or a valid sampling request would be rejected at
+    # submit; checked at import so the two registries cannot drift.
+    from .api import SAMPLING_OPTION_KEYS
+    assert SAMPLING_OPTION_KEYS == OPTION_KEYS, (
+        SAMPLING_OPTION_KEYS, OPTION_KEYS)
+
+
+_check_option_key_registry()
 
 
 def log_softmax(logits: np.ndarray) -> np.ndarray:

@@ -1,0 +1,89 @@
+"""Unit tests for the declarative CLI flag-compatibility table.
+
+`launch.serve.FLAG_RULES` is the compatibility policy as data; these tests
+iterate it directly: every rule has a minimal violating namespace that
+fires it (and only it), the table is exhaustively covered by name so a new
+rule without a test fails loudly, and known-good combinations pass clean.
+"""
+import argparse
+import sys
+
+import pytest
+
+from repro.launch.serve import FLAG_RULES, check_flags
+
+
+def ns(**over):
+    """A namespace matching the parser's defaults."""
+    base = dict(workload="lm", arch="qwen1.5-4b", tokens=16, requests=4,
+                slots=4, d_model=64, n_layers=4, vocab=512, seq=64,
+                img_hw=0, int4=False, precision="", scheduler="fifo",
+                admission="continuous", prefill_chunk=1, slo_ms=0.0,
+                replicas=1, fault_plan="", workers=0, speculate=0,
+                temperature=0.0, top_k=0, top_p=1.0, mixed_trace=False,
+                data_shard=0, seed=0)
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+#: rule name -> a minimal namespace override that violates exactly it
+VIOLATIONS = {
+    "replicas-range": dict(replicas=0),
+    "workers-range": dict(workers=-1),
+    "slo-needs-continuous": dict(slo_ms=100.0, admission="batch"),
+    "slo-vs-fleet": dict(slo_ms=100.0, replicas=2),
+    "precision-vs-int4": dict(precision="adaptive", int4=True),
+    "precision-vs-fleet": dict(precision="adaptive", fault_plan="0=wedge@4"),
+    "lm-only-knobs": dict(workload="snn", temperature=0.5),
+    "sampling-needs-continuous": dict(admission="batch", speculate=2),
+    "speculate-vs-precision": dict(speculate=2, precision="fp32"),
+    "workers-vs-replicas": dict(workers=2, replicas=2),
+    "workers-vs-fault-plan": dict(workers=2, fault_plan="0=wedge@4"),
+    "workers-vs-precision": dict(workers=2, precision="adaptive"),
+    "workers-vs-slo": dict(workers=2, slo_ms=100.0),
+    "workers-vs-data-shard": dict(workers=2, data_shard=2),
+}
+
+
+def test_table_is_well_formed_and_fully_covered():
+    names = [rule.name for rule in FLAG_RULES]
+    assert len(names) == len(set(names)), "duplicate rule names"
+    assert all(rule.error for rule in FLAG_RULES), "rule without a message"
+    # exhaustive: a rule added to the table without a violation case (or
+    # vice versa) fails here by name
+    assert set(names) == set(VIOLATIONS)
+
+
+def test_defaults_are_accepted():
+    assert check_flags(ns()) == []
+
+
+@pytest.mark.parametrize("name", sorted(VIOLATIONS))
+def test_each_rule_fires_exactly_once_on_its_violation(name):
+    fired = check_flags(ns(**VIOLATIONS[name]))
+    assert [rule.name for rule in fired] == [name]
+
+
+@pytest.mark.parametrize("over", [
+    dict(workers=2),
+    dict(workers=2, workload="snn"),
+    dict(workers=2, int4=True, speculate=3, temperature=0.7, top_p=0.9),
+    dict(workers=2, scheduler="sparsity", mixed_trace=True, workload="snn"),
+    dict(replicas=3, fault_plan="0=wedge@4,1=nan@6:slot=0"),
+    dict(precision="adaptive", scheduler="sparsity", workload="snn"),
+    dict(slo_ms=3000.0, scheduler="slo"),
+    dict(speculate=4, temperature=0.8, top_p=0.95),
+    dict(data_shard=2, workload="snn"),
+])
+def test_known_good_combinations_pass(over):
+    assert check_flags(ns(**over)) == []
+
+
+def test_cli_rejects_conflict_with_table_message(monkeypatch, capsys):
+    from repro.launch import serve as launch_serve
+    monkeypatch.setattr(sys, "argv",
+                        ["serve.py", "--workers", "2", "--replicas", "3"])
+    with pytest.raises(SystemExit) as exc:
+        launch_serve.main()
+    assert exc.value.code == 2
+    assert "pick one" in capsys.readouterr().err

@@ -125,12 +125,14 @@ def test_pinned_fp32_never_served_int4(seed):
     core = EngineCore(runner, EngineConfig(slots=2))
     pinned, unpinned = [], []
     for _ in range(12):
-        opts = {"skip": rng.random()}
+        skip = rng.random()                 # stub reads skip from the payload
+        opts = {}
         if rng.random() < 0.5:
             opts["skip_hint"] = rng.random()
         if rng.random() < 0.5:
             opts["pin_precision"] = "fp32"
-        rid = core.submit({"key": "a", "steps": rng.randrange(1, 4)},
+        rid = core.submit({"key": "a", "steps": rng.randrange(1, 4),
+                           "skip": skip},
                           deadline_s=rng.choice([None, 1000.0]), **opts)
         (pinned if "pin_precision" in opts else unpinned).append(rid)
     results = core.run_until_complete()
@@ -220,11 +222,12 @@ def test_random_precision_interleavings_never_leak_slots(seed):
     for _ in range(60):
         op = rng.random()
         if op < 0.45 and len(live) < 12:
-            opts = {"skip": rng.random()}
+            skip = rng.random()             # stub reads skip from the payload
+            opts = {}
             if rng.random() < 0.3:
                 opts["pin_precision"] = rng.choice(PRECISIONS)
-            rid = core.submit({"key": "a", "steps": rng.randrange(1, 5)},
-                              **opts)
+            rid = core.submit({"key": "a", "steps": rng.randrange(1, 5),
+                               "skip": skip}, **opts)
             submitted.add(rid)
             live.append(rid)
         elif op < 0.6 and live:

@@ -1,0 +1,281 @@
+"""Wire codec + submit-boundary validation tests.
+
+Property-style: random value trees (nested dicts/lists/tuples, numpy
+arrays of several dtypes, NaN/Inf floats, bytes, non-string dict keys)
+must survive a full pack -> bytes -> unpack round trip *bit-exactly* —
+that property is what lets the router assert replayed outputs identical
+across process boundaries. Plus the protocol's refusal paths: version
+mismatch, unknown message types/fields/tags, truncated frames, and the
+`RequestOptions` submit-boundary validation the wire shares with
+`EngineCore.submit`.
+"""
+import io
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.serve import wire
+from repro.serve.api import (Request, RequestOptions, Result, SubmitSpec,
+                             validate_options)
+from repro.serve.sampling import SamplingParams
+from repro.serve.wire import (MESSAGE_TYPES, PROTOCOL_VERSION, AckMsg,
+                              HeartbeatMsg, HelloMsg, PartialMsg, PollMsg,
+                              ProtocolError, ResultMsg, StepMsg, SubmitMsg,
+                              decode_value, encode_value, pack, read_frame,
+                              request_from_wire, request_to_wire,
+                              result_from_wire, result_to_wire, unpack,
+                              write_frame)
+
+# ---------------------------------------------------------------------------
+# helpers: random trees + NaN-aware, dtype-exact deep equality
+# ---------------------------------------------------------------------------
+
+_DTYPES = (np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_)
+
+
+def random_value(rng, depth=0):
+    kinds = ["int", "float", "special", "str", "none", "bool", "bytes", "nd"]
+    if depth < 3:
+        kinds += ["list", "tuple", "dict", "oddmap"] * 2
+    kind = rng.choice(kinds)
+    if kind == "int":
+        return rng.randrange(-(2 ** 40), 2 ** 40)
+    if kind == "float":
+        return rng.uniform(-1e12, 1e12)
+    if kind == "special":
+        return rng.choice([math.nan, math.inf, -math.inf, -0.0])
+    if kind == "str":
+        return "".join(rng.choice("abc_ é☃") for _ in range(rng.randrange(8)))
+    if kind == "none":
+        return None
+    if kind == "bool":
+        return rng.random() < 0.5
+    if kind == "bytes":
+        return bytes(rng.randrange(256) for _ in range(rng.randrange(12)))
+    if kind == "nd":
+        dtype = rng.choice(_DTYPES)
+        shape = tuple(rng.randrange(1, 4) for _ in range(rng.randrange(3)))
+        arr = np.array(rng.random()) * np.ones(shape)
+        if np.issubdtype(dtype, np.floating) and rng.random() < 0.5:
+            arr = arr * rng.choice([math.nan, math.inf, 1.0])
+        return (arr * 100).astype(dtype)
+    if kind == "list":
+        return [random_value(rng, depth + 1) for _ in range(rng.randrange(4))]
+    if kind == "tuple":
+        return tuple(random_value(rng, depth + 1)
+                     for _ in range(rng.randrange(4)))
+    if kind == "dict":
+        return {f"k{i}": random_value(rng, depth + 1)
+                for i in range(rng.randrange(4))}
+    # mapping that needs the __map__ escape: int and tag-like string keys
+    return {rng.choice([rng.randrange(100), "__nd__", "__weird__"]):
+            random_value(rng, depth + 1)}
+
+
+def deep_equal(a, b):
+    if isinstance(a, (np.ndarray, np.generic)) or isinstance(
+            b, (np.ndarray, np.generic)):
+        # the codec normalizes numpy scalars to their 0-d array form
+        if not (isinstance(a, (np.ndarray, np.generic))
+                and isinstance(b, (np.ndarray, np.generic))):
+            return False
+        a, b = np.asarray(a), np.asarray(b)
+        return (a.dtype == b.dtype and a.shape == b.shape
+                and a.tobytes() == b.tobytes())       # bit-exact, NaN-proof
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) or math.isnan(b):
+            return math.isnan(a) and math.isnan(b)
+        return a == b and math.copysign(1, a) == math.copysign(1, b)
+    if type(a) is not type(b):
+        return False
+    if isinstance(a, (list, tuple)):
+        return len(a) == len(b) and all(map(deep_equal, a, b))
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(deep_equal(a[k], b[k]) for k in a)
+    return a == b
+
+
+def roundtrip(value):
+    msg = unpack(pack(ResultMsg(rid=7, outputs=value, stats={"x": 1})))
+    return msg.outputs
+
+
+# ---------------------------------------------------------------------------
+# codec round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_trees_roundtrip_bit_exact(seed):
+    rng = random.Random(seed)
+    for _ in range(60):
+        value = random_value(rng)
+        assert deep_equal(roundtrip(value), value), value
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_request_and_result_roundtrip(seed):
+    rng = random.Random(1000 + seed)
+    request = Request(request_id=rng.randrange(100),
+                      payload=random_value(rng),
+                      options={"max_new_tokens": rng.randrange(8),
+                               "seed": seed},
+                      deadline_s=rng.choice([None, 12.5]),
+                      priority=rng.randrange(-2, 3),
+                      arrival_s=rng.random())
+    back = request_from_wire(request_to_wire(request))
+    assert back.request_id == request.request_id
+    assert deep_equal(back.payload, request.payload)
+    assert dict(back.options) == dict(request.options)
+    assert back.deadline_s == request.deadline_s
+    assert back.priority == request.priority
+
+    result = Result(request_id=rng.randrange(100),
+                    outputs=random_value(rng),
+                    stats={"cost": {"flops": math.nan, "bytes": math.inf},
+                           "probe": np.float32(3.25),
+                           "tree": random_value(rng)},
+                    status=rng.choice(["ok", "failed", "expired"]))
+    back = result_from_wire(result_to_wire(result))
+    assert back.request_id == result.request_id and back.status == result.status
+    assert deep_equal(back.outputs, result.outputs)
+    assert math.isnan(back.stats["cost"]["flops"])
+    assert back.stats["cost"]["bytes"] == math.inf
+    assert deep_equal(back.stats["tree"], result.stats["tree"])
+
+
+def test_numpy_payload_bit_exact_including_nan_patterns():
+    # two distinct NaN bit patterns must survive: the codec moves raw bytes
+    raw = np.array([0x7FC00001, 0x7FC00002], dtype=np.uint32).view(np.float32)
+    out = roundtrip(raw)
+    assert out.tobytes() == raw.tobytes()
+
+
+def test_every_message_type_roundtrips():
+    for cls in MESSAGE_TYPES.values():
+        msg = cls()
+        assert unpack(pack(msg)) == msg
+    # and with non-default content on the workhorses
+    for msg in (SubmitMsg(payload=[1, 2], deadline_s=3.0, priority=-1,
+                          options={"max_new_tokens": 4}),
+                HeartbeatMsg(seq=9, marker=(1, 2, 3, 4), failed=1,
+                             cost_finite=False, in_flight=2, pending=1,
+                             stats={"ok": 3}),
+                PartialMsg(rid=5, items=(("tok", 7), ("tok", 8))),
+                AckMsg(ok=False, rid=3, error="QueueFull: full")):
+        back = unpack(pack(msg))
+        assert back == msg
+        assert isinstance(back.__class__, type(msg.__class__))
+    # tuples come back as tuples, not lists (marker identity matters)
+    hb = unpack(pack(HeartbeatMsg(marker=(1, 2, 3, 4))))
+    assert hb.marker == (1, 2, 3, 4) and isinstance(hb.marker, tuple)
+
+
+# ---------------------------------------------------------------------------
+# refusal paths
+# ---------------------------------------------------------------------------
+
+def test_version_mismatch_rejected_naming_both_versions():
+    frame = pack(StepMsg(seq=1), version=PROTOCOL_VERSION + 41)
+    with pytest.raises(ProtocolError) as exc:
+        unpack(frame)
+    assert f"v{PROTOCOL_VERSION + 41}" in str(exc.value)
+    assert f"v{PROTOCOL_VERSION}" in str(exc.value)
+
+
+def test_unknown_message_type_and_fields_rejected():
+    bad = pack(PollMsg(rid=1)).replace(b'"poll"', b'"gossip"')
+    with pytest.raises(ProtocolError, match="unknown wire message type"):
+        unpack(bad)
+    bad = pack(PollMsg(rid=1)).replace(b'"rid"', b'"rip"')
+    with pytest.raises(ProtocolError, match="unknown fields"):
+        unpack(bad)
+
+
+def test_unknown_value_tag_and_unencodable_rejected():
+    with pytest.raises(ProtocolError, match="unknown wire value tag"):
+        decode_value({"__hologram__": [1, 2]})
+    with pytest.raises(ProtocolError, match="cannot encode"):
+        encode_value(object())
+    with pytest.raises(ProtocolError, match="not a wire message"):
+        pack(Request(0, []))
+
+
+def test_framing_eof_and_truncation():
+    buf = io.BytesIO()
+    write_frame(buf, HelloMsg(runner={"kind": "stub"}))
+    write_frame(buf, StepMsg(seq=2))
+    data = buf.getvalue()
+    stream = io.BytesIO(data)
+    assert isinstance(read_frame(stream), HelloMsg)
+    assert read_frame(stream) == StepMsg(seq=2)
+    assert read_frame(stream) is None          # clean EOF between frames
+    cut = io.BytesIO(data[:-3])                # second frame loses its tail
+    assert isinstance(read_frame(cut), HelloMsg)
+    with pytest.raises(ProtocolError, match="truncated"):
+        read_frame(cut)                        # mid-frame EOF is loud
+
+
+# ---------------------------------------------------------------------------
+# submit-boundary validation (RequestOptions / SubmitSpec)
+# ---------------------------------------------------------------------------
+
+def test_request_options_rejects_unknown_and_ill_typed():
+    with pytest.raises(ValueError, match=r"unknown request option\(s\).*bogus"):
+        RequestOptions.parse({"bogus": 1})
+    for key, value in [("max_new_tokens", -1), ("temperature", -0.5),
+                       ("top_p", 0.0), ("top_p", 1.5), ("top_k", "many"),
+                       ("logprobs", 1), ("pin_precision", "int8"),
+                       ("skip_hint", 2.0), ("seed", 1.5)]:
+        with pytest.raises(ValueError, match=key):
+            RequestOptions.parse({key: value})
+    opts = validate_options({"temperature": 1, "top_k": 3})
+    assert opts == {"temperature": 1, "top_k": 3}
+
+
+def test_request_options_present_tracking_drives_sampling_opt_in():
+    assert RequestOptions.parse({}).sampling is None
+    assert RequestOptions.parse({"max_new_tokens": 4}).sampling is None
+    # present-with-default is observably different from absent
+    params = RequestOptions.parse({"temperature": 0.0}).sampling
+    assert params == SamplingParams()
+    assert RequestOptions.parse({"logprobs": True}).sampling.track_logprobs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_from_options_matches_request_options_sampling(seed):
+    rng = random.Random(seed)
+    for _ in range(40):
+        opts = {}
+        if rng.random() < 0.7:
+            opts["temperature"] = rng.choice([0.0, 0.5, 1.0])
+        if rng.random() < 0.5:
+            opts["top_k"] = rng.randrange(5)
+        if rng.random() < 0.5:
+            opts["top_p"] = rng.choice([0.3, 1.0])
+        if rng.random() < 0.3:
+            opts["seed"] = rng.randrange(100)
+        if rng.random() < 0.3:
+            opts["logprobs"] = rng.random() < 0.5
+        if rng.random() < 0.3:
+            opts["max_new_tokens"] = rng.randrange(8)   # non-sampling key
+        assert (SamplingParams.from_options(opts)
+                == RequestOptions.parse(opts).sampling)
+
+
+def test_submit_spec_merges_and_validates():
+    spec = SubmitSpec.make([1, 2], deadline_s=3, priority=2,
+                           options={"top_k": 1}, temperature=0.5)
+    assert spec.deadline_s == 3.0 and spec.priority == 2
+    assert spec.options == {"top_k": 1, "temperature": 0.5}
+    # loose kwargs win on conflict
+    assert SubmitSpec.make(0, options={"top_k": 1},
+                           top_k=7).options["top_k"] == 7
+    with pytest.raises(ValueError, match="deadline_s"):
+        SubmitSpec.make(0, deadline_s=-1.0)
+    with pytest.raises(ValueError, match="unknown request option"):
+        SubmitSpec.make(0, tempature=0.5)
+    # wire SubmitMsg carries exactly the spec shape
+    back = wire.unpack(wire.pack(SubmitMsg.from_spec(spec))).to_spec()
+    assert back == spec

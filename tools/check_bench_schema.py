@@ -16,6 +16,9 @@ vs-pinned energy wins and bit-identity flags.
 report their decode-goodput metrics, the speculative mode its draft/accept
 ledger, and the record its accept rate, vs-plain goodput win, greedy
 bit-identity flag and sampled seed-determinism flag.
+`serve_engine_fleet` records: in-process and subprocess serving modes must
+both report their per-router-step wall time (the IPC overhead comparison),
+and the chaos pass its kill->replay outcome flags.
 Stdlib-only — runs in the docs CI job without the jax toolchain.
 
     python tools/check_bench_schema.py [BENCH_results.json ...]
@@ -172,6 +175,56 @@ def check_speculative_record(rec) -> list:
     return problems
 
 
+# bench_fleet records: both serving modes' per-step wall time (the IPC
+# overhead comparison) plus the chaos pass's replay outcome flags.
+FLEET_MODE_KEYS = ("wall_s", "router_steps", "step_ms", "req_per_s")
+FLEET_CHAOS_NUMERIC = ("drains", "rerouted", "router_steps")
+FLEET_CHAOS_BOOL = ("all_ok", "bit_identical")
+
+
+def check_fleet_record(rec) -> list:
+    problems = []
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict):
+        return problems                 # shape error already reported
+    for mode in ("inproc", "subprocess"):
+        sub = metrics.get(mode)
+        if not isinstance(sub, dict):
+            problems.append(f"metrics.{mode} missing or not an object")
+            continue
+        keys = FLEET_MODE_KEYS + (("spawn_s",) if mode == "subprocess"
+                                  else ())
+        for k in keys:
+            if k not in sub:
+                problems.append(f"metrics.{mode} missing '{k}'")
+            elif isinstance(sub[k], bool) or not isinstance(
+                    sub[k], (int, float)):
+                problems.append(f"metrics.{mode}.{k} must be numeric")
+    if "ipc_overhead_x" not in metrics:
+        problems.append("metrics missing 'ipc_overhead_x'")
+    elif isinstance(metrics["ipc_overhead_x"], bool) or not isinstance(
+            metrics["ipc_overhead_x"], (int, float)):
+        problems.append("metrics.ipc_overhead_x must be numeric")
+    if not isinstance(metrics.get("bit_identical"), bool):
+        problems.append("metrics.bit_identical must be a bool")
+    chaos = metrics.get("chaos")
+    if not isinstance(chaos, dict):
+        problems.append("metrics.chaos missing or not an object")
+        return problems
+    for k in FLEET_CHAOS_NUMERIC:
+        if k not in chaos:
+            problems.append(f"metrics.chaos missing '{k}'")
+        elif isinstance(chaos[k], bool) or not isinstance(
+                chaos[k], (int, float)):
+            problems.append(f"metrics.chaos.{k} must be numeric")
+    for k in FLEET_CHAOS_BOOL:
+        if k not in chaos:
+            problems.append(f"metrics.chaos missing '{k}'")
+        elif not isinstance(chaos[k], bool):
+            problems.append(f"metrics.chaos.{k} must be a bool")
+    return problems
+
+
 def check_record(rec) -> list:
     problems = []
     if not isinstance(rec, dict):
@@ -192,6 +245,8 @@ def check_record(rec) -> list:
         problems += check_precision_record(rec)
     if rec.get("name") == "serve_engine_speculative":
         problems += check_speculative_record(rec)
+    if rec.get("name") == "serve_engine_fleet":
+        problems += check_fleet_record(rec)
     return problems
 
 
