@@ -63,9 +63,19 @@ def normalize_record(record: dict) -> dict:
             "timestamp": int(ts)}
 
 
+def _record_key(rec: dict) -> tuple:
+    """Identity for duplicate suppression: same name + config + timestamp
+    is the same measurement event (re-appends add no information and trip
+    the schema checker's duplicate guard)."""
+    return (rec.get("name"),
+            json.dumps(rec.get("config", {}), sort_keys=True),
+            rec.get("timestamp"))
+
+
 def append_result(record: dict) -> None:
     """Append one benchmark record to BENCH_results.json (a JSON list),
-    normalized to the canonical schema."""
+    normalized to the canonical schema. Exact duplicates (same name,
+    config and timestamp) are dropped rather than re-appended."""
     record = normalize_record(record)
     try:
         with open(RESULTS_PATH) as f:
@@ -74,6 +84,9 @@ def append_result(record: dict) -> None:
             data = []
     except (FileNotFoundError, json.JSONDecodeError):
         data = []
+    key = _record_key(record)
+    if any(isinstance(r, dict) and _record_key(r) == key for r in data):
+        return
     data.append(record)
     with open(RESULTS_PATH, "w") as f:
         json.dump(data, f, indent=1)

@@ -675,7 +675,7 @@ def bench_faults(smoke: bool) -> dict:
 
     plans = parse_fleet_plan("0=wedge@4,1=nan@4:slot=0")
     router = make_router(runner, 3, EngineConfig(slots=2), plans=plans,
-                         wedge_patience=3)
+                         wedge_patience=3, obs=True)
     rids = [router.submit(p, max_new_tokens=tokens, affinity=f"s{i}")
             for i, p in enumerate(prompts)]
     a, b, c = rids
@@ -720,6 +720,23 @@ def bench_faults(smoke: bool) -> dict:
         "clean_partial_tokens": len(streams[b]),
     }
 
+    # the wedged replica's drain carries a flight-recorder postmortem: its
+    # final StepReport frames (summaries), plus the heartbeat evidence the
+    # router condemned it on
+    detail = wedge_drain[4]
+    dump = detail.get("dump")
+    assert dump and dump.get("frames"), (
+        "wedged replica drained without a flight-recorder dump")
+    assert dump["frames"][-1]["step"] is not None
+    flight_recorder = {
+        "reason": dump["reason"],
+        "frames": len(dump["frames"]),
+        "notes": len(dump.get("notes", [])),
+        "last_frame_step": dump["frames"][-1]["step"],
+        "marker": list(detail["marker"]),
+        "cost_finite": detail["cost_finite"],
+    }
+
     # scenario 2: queue flood against one small replica
     shed_router = make_router(runner, 1,
                               EngineConfig(slots=2, max_queue=2),
@@ -741,12 +758,13 @@ def bench_faults(smoke: bool) -> dict:
 
     rec = {"name": "serve_engine_faults", "replicas": 3,
            "wedge_reroute": wedge_reroute, "nan_poison": nan_poison,
-           "overload": overload}
+           "overload": overload, "flight_recorder": flight_recorder}
     emit("serve_engine_faults", 0.0,
          f"recovery={recovery_steps} steps, goodput "
          f"{wedge_reroute['goodput_ok_per_step']} vs clean "
          f"{wedge_reroute['goodput_fault_free_per_step']} ok/step, "
-         f"rejected={n_rejected}",
+         f"rejected={n_rejected}, "
+         f"recorder_frames={flight_recorder['frames']}",
          **{k: v for k, v in rec.items() if k != "name"})
     return rec
 
@@ -757,7 +775,10 @@ def bench_faults(smoke: bool) -> dict:
 
 def bench_fleet(smoke: bool) -> dict:
     """In-process 2-replica fleet vs 2-worker *subprocess* fleet on the
-    same LM trace, plus a chaos pass with one worker killed mid-run.
+    same LM trace, plus an observability-attached pass (tracing + metrics
+    + flight recorder over the wire; measures the obs tax and asserts one
+    merged cross-process trace) and a chaos pass with one worker killed
+    mid-run.
 
     All three serving modes are built from one wire-encodable `RunnerSpec`
     (same seed -> same params in every process), so the comparison is pure
@@ -808,6 +829,24 @@ def bench_fleet(smoke: bool) -> dict:
     assert [r.outputs for r in res_sub] == expected, (
         "subprocess fleet outputs diverged from in-process fleet")
 
+    # observability tax: the same 2-worker subprocess fleet with tracing,
+    # metrics and flight recorders attached on both ends of the wire.
+    # Contract (asserted): outputs stay bit-identical; the router merges
+    # every worker's spans into one cross-process trace. Measured: per-step
+    # wall overhead vs the detached subprocess fleet.
+    fleet_obs = make_worker_fleet(spec, 2, config, obs=True)
+    try:
+        res_obs, dt_obs, stats_obs = serve(fleet_obs)
+        tel = fleet_obs.telemetry()
+    finally:
+        fleet_obs.close()
+    obs_identical = [r.outputs for r in res_obs] == expected
+    assert obs_identical, "attached observability perturbed fleet outputs"
+    span_replicas = sorted({str(s.get("replica")) for s in tel["trace"]})
+    assert tel["trace"] and len(span_replicas) >= 2, (
+        "router did not merge worker spans into one cross-process trace")
+    step_ms_obs = 1e3 * dt_obs / max(1, stats_obs["router_steps"])
+
     # chaos pass: SIGKILL a worker that is holding in-flight requests
     chaos = make_worker_fleet(spec, 2, config)
     try:
@@ -844,6 +883,14 @@ def bench_fleet(smoke: bool) -> dict:
                        "spawn_s": round(spawn_s, 3)},
         "ipc_overhead_x": round(step_ms_sub / step_ms_in, 3),
         "bit_identical": bit_identical,
+        "obs": {"wall_s": round(dt_obs, 3),
+                "step_ms": round(step_ms_obs, 3),
+                "overhead_x": round(step_ms_obs / step_ms_sub, 3),
+                "merged_trace_spans": len(tel["trace"]),
+                "trace_replicas": span_replicas,
+                "engine_steps": tel["metrics"].get(
+                    "engine_steps", {}).get("value", 0),
+                "bit_identical": obs_identical},
         "chaos": {"drains": len(chaos.drain_log),
                   "rerouted": stats_chaos["rerouted"],
                   "router_steps": stats_chaos["router_steps"],
@@ -855,6 +902,11 @@ def bench_fleet(smoke: bool) -> dict:
          f"({rec['ipc_overhead_x']}x), kill->replay rerouted="
          f"{stats_chaos['rerouted']} bit_identical={bit_identical}",
          **{k: v for k, v in rec.items() if k != "name"})
+    emit("serve_engine_obs", 0.0,
+         f"obs tax {rec['obs']['overhead_x']}x/step over detached, "
+         f"{rec['obs']['merged_trace_spans']} merged spans from "
+         f"{len(span_replicas)} sources, bit_identical={obs_identical}",
+         workers=2, obs=rec["obs"])
     return rec
 
 

@@ -30,12 +30,17 @@
     # multi-process fleet: 2 worker subprocesses (one EngineCore + runner
     # each) supervised over the versioned wire protocol:
     PYTHONPATH=src python -m repro.launch.serve --workload lm --workers 2
+
+    # observability plane: request traces, typed metrics and a flight
+    # recorder on every replica, exported at exit (json|prom):
+    PYTHONPATH=src python -m repro.launch.serve --workload lm --metrics prom
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
 import dataclasses
+import json
 from typing import Callable, List
 
 import jax
@@ -56,6 +61,15 @@ def engine_config(args) -> EngineConfig:
                         precision=args.precision)
 
 
+def make_obs(args):
+    """One `Observability` bundle when --metrics asked for one, else None
+    (detached serving is the default and is bit-identical by contract)."""
+    if not args.metrics:
+        return None
+    from ..obs import Observability
+    return Observability()
+
+
 def precision_engine(runner_factory, pricer, args):
     """Precision-capable single engine: fp32+int4 variant registry behind a
     `PrecisionRunner`, pre-warmed, with the controller bound to the sparsity
@@ -74,7 +88,8 @@ def precision_engine(runner_factory, pricer, args):
     inner = getattr(scheduler, "inner", scheduler)
     if isinstance(inner, SparsityAwareScheduler):
         bind_controller(inner, controller)
-    core = EngineCore(runner, engine_config(args), scheduler=scheduler)
+    core = EngineCore(runner, engine_config(args), scheduler=scheduler,
+                      obs=make_obs(args))
     return core, controller
 
 
@@ -90,15 +105,43 @@ def build_engine(runner, args):
         from ..serve.router import make_router
         plans = parse_fleet_plan(args.fault_plan) if args.fault_plan else None
         return make_router(runner, max(1, args.replicas),
-                           engine_config(args), plans=plans)
-    return EngineCore(runner, engine_config(args))
+                           engine_config(args), plans=plans,
+                           obs=bool(args.metrics))
+    return EngineCore(runner, engine_config(args), obs=make_obs(args))
 
 
 def print_fleet_report(core) -> None:
     print(f"engine: {core.stats()}")
-    for step, idx, condition, rerouted in getattr(core, "drain_log", []):
+    for entry in getattr(core, "drain_log", []):
+        step, idx, condition, rerouted = entry[:4]
+        detail = entry[4] if len(entry) > 4 else {}
+        extra = (f"; marker={detail.get('marker')} "
+                 f"cost_finite={detail.get('cost_finite')}")
+        dump = detail.get("dump")
+        if dump:
+            extra += f" recorder_frames={len(dump.get('frames', []))}"
         print(f"drain @step {step}: replica {idx} condemned ({condition}), "
-              f"re-routed requests {rerouted}")
+              f"re-routed requests {rerouted}{extra}")
+
+
+def print_observability(core, fmt: str) -> None:
+    """--metrics export: the run's metrics snapshot (JSON or Prometheus
+    text) plus a one-line trace / flight-recorder summary. Routers merge
+    replica telemetry; a lone engine exports its own bundle."""
+    from ..obs import to_prometheus
+    if hasattr(core, "telemetry"):              # router fleet: merged view
+        tel = core.telemetry()
+    elif getattr(core, "obs", None) is not None:
+        tel = core.obs.snapshot()
+    else:
+        return
+    snap = tel.get("metrics", {})
+    if fmt == "prom":
+        print(to_prometheus(snap), end="")
+    else:
+        print("METRICS_JSON " + json.dumps(snap, sort_keys=True))
+    print(f"trace: {len(tel.get('trace', []))} spans; "
+          f"recorder dumps: {len(tel.get('dumps', []))}")
 
 
 def serve_lm(args) -> None:
@@ -114,7 +157,8 @@ def serve_lm(args) -> None:
         spec = lm_spec(cfg, seed=args.seed, max_seq=args.seq,
                        quant_bits=4 if args.int4 else 0,
                        speculate_k=args.speculate)
-        core = make_worker_fleet(spec, args.workers, engine_config(args))
+        core = make_worker_fleet(spec, args.workers, engine_config(args),
+                                 obs=bool(args.metrics))
     elif args.precision:
         from ..serve.precision import make_lm_variants
         params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -191,6 +235,8 @@ def serve_lm(args) -> None:
     print_fleet_report(core)
     if controller is not None:
         print(f"precision controller: {controller.summary()}")
+    if args.metrics:
+        print_observability(core, args.metrics)
     if hasattr(core, "close"):                  # worker fleets need a reap
         core.close()
 
@@ -206,7 +252,8 @@ def serve_snn(args) -> None:
         from ..serve.router import make_worker_fleet
         from ..serve.worker import snn_spec
         core = make_worker_fleet(snn_spec(cfg, seed=args.seed),
-                                 args.workers, engine_config(args))
+                                 args.workers, engine_config(args),
+                                 obs=bool(args.metrics))
     elif args.precision:
         from ..models.vgg9 import init_vgg9
         from ..serve.precision import make_snn_pricer, make_snn_variants
@@ -263,6 +310,8 @@ def serve_snn(args) -> None:
     print_fleet_report(core)
     if controller is not None:
         print(f"precision controller: {controller.summary()}")
+    if args.metrics:
+        print_observability(core, args.metrics)
     if hasattr(core, "admission_log"):          # single engine, not a fleet
         print(f"admissions: {core.admission_log}")
     if hasattr(core, "close"):                  # worker fleets need a reap
@@ -424,6 +473,12 @@ def main():
     ap.add_argument("--data-shard", type=int, default=0,
                     help="SNN: split slot batches over this many devices "
                          "(a ('data',) mesh; needs the devices to exist)")
+    ap.add_argument("--metrics", choices=("json", "prom"), default="",
+                    help="attach the observability plane (repro.obs): "
+                         "per-request trace spans, typed metrics and a "
+                         "flight recorder on every engine/replica, "
+                         "exported at exit as JSON or Prometheus text. "
+                         "Outputs stay bit-identical with it on or off")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     for rule in check_flags(args):

@@ -144,7 +144,8 @@ class EngineCore:
 
     def __init__(self, runner: ModelRunner, config: EngineConfig = EngineConfig(),
                  scheduler: Optional[Scheduler] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 obs: Optional[Any] = None):
         assert config.admission in ("continuous", "batch"), config.admission
         self.runner = runner
         self.config = config
@@ -198,6 +199,13 @@ class EngineCore:
         #: the last `StepReport` a continuous-admission step produced —
         #: supervision surface for `serve.router.Router`'s health probes.
         self.last_report: Optional[Any] = None
+        #: optional `repro.obs.Observability` bundle. Hooks only receive
+        #: values the engine computed anyway (clock readings, reports,
+        #: results) — attaching one is bit-identical to running without
+        #: (the no-perturbation contract `tests/test_obs.py` asserts).
+        self.obs = obs
+        if obs is not None:
+            obs.attach_engine(self)
 
     # -- admission ----------------------------------------------------------
 
@@ -226,10 +234,15 @@ class EngineCore:
                 f"admission queue at capacity ({self.config.max_queue})")
         rid = self._next_id
         self._next_id += 1
+        now = self._clock()
         self._queue.append(Request(rid, spec.payload, dict(spec.options),
                                    deadline_s=spec.deadline_s,
                                    priority=spec.priority,
-                                   arrival_s=self._clock()))
+                                   arrival_s=now))
+        if self.obs is not None:
+            self.obs.on_submit(rid, self._steps_run, now,
+                               priority=spec.priority,
+                               deadline_s=spec.deadline_s)
         return rid
 
     def pending(self) -> int:
@@ -278,6 +291,7 @@ class EngineCore:
                 self.scheduler.observe(req, res)
                 self._results[request_id] = res
                 self._count_retired(status)
+                self._obs_retire(res)
                 return True
         if request_id not in self._resident:
             return False
@@ -292,6 +306,7 @@ class EngineCore:
         self._progress.pop(slot.index, None)
         slot.release()
         self._count_retired(status)
+        self._obs_retire(res)
         return True
 
     def _count_retired(self, status: str) -> None:
@@ -363,6 +378,9 @@ class EngineCore:
             idle = 0 if self._progress_marker() != before else idle + 1
             if limit and idle >= limit:
                 stuck = sorted(self._resident)
+                if self.obs is not None:
+                    self.obs.on_dump("stalled", self._steps_run,
+                                     resident=stuck, queued=len(self._queue))
                 raise EngineStalled(
                     f"no slot made progress for {idle} consecutive steps "
                     f"(steps_run={self._steps_run}, resident request ids "
@@ -390,6 +408,12 @@ class EngineCore:
         self._results[result.request_id] = result
         slot.release()
         self._requests_done += 1
+        self._obs_retire(result)
+
+    def _obs_retire(self, result: Result) -> None:
+        """Every terminal-result path funnels here for the trace's sake."""
+        if self.obs is not None:
+            self.obs.on_retire(result, self._steps_run, self._clock())
 
     # -- continuous admission ------------------------------------------------
 
@@ -425,6 +449,9 @@ class EngineCore:
                     self._session_key = key
                 self.admission_log.append(
                     (self._steps_run, [r.request_id for r in picks]))
+                if self.obs is not None:
+                    self.obs.on_admit([r.request_id for r in picks],
+                                      self._steps_run, now)
                 for req, slot in zip(picks, free):
                     slot.acquire(req.request_id)
                     self._resident[req.request_id] = req
@@ -481,6 +508,12 @@ class EngineCore:
         if hook is not None:
             hook(report, seconds=seconds, now=self._clock())
         self.last_report = report
+        if self.obs is not None:
+            self.obs.on_step(
+                report, step=self._steps_run - 1, now=t0 + seconds,
+                seconds=seconds, queue_len=len(self._queue),
+                occupied=len(occupied),
+                poisoned=[p.request_id for p in poisoned.values()])
 
         for idx, res in report.finished.items():
             slot = self.slots[idx]
@@ -497,6 +530,7 @@ class EngineCore:
                 self._results[res.request_id] = res
                 slot.release()
                 self._failed += 1
+                self._obs_retire(res)
                 continue
             self._complete(slot, res)
             done += 1
@@ -506,6 +540,9 @@ class EngineCore:
             # in the reported outputs, e.g. a fault wrapper's injection)
             if idx not in report.finished and prog.request_id in self._resident:
                 self.cancel(prog.request_id, status="failed")
+        if poisoned and self.obs is not None:
+            self.obs.on_dump("numerics-poison", self._steps_run - 1,
+                             rids=[p.request_id for p in poisoned.values()])
         return done
 
     # -- run-to-completion batching (PR-2 semantics) -------------------------
@@ -520,6 +557,9 @@ class EngineCore:
         self._take_from_queue(picks, self.runner.bucket_key)
         self.admission_log.append(
             (self._steps_run, [r.request_id for r in picks]))
+        if self.obs is not None:
+            self.obs.on_admit([r.request_id for r in picks],
+                              self._steps_run, self._clock())
 
         batch: List[Request] = list(picks)
         for slot, req in zip(self.slots, batch):

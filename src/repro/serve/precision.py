@@ -445,6 +445,37 @@ class PrecisionController:
             "downshifted": self._downshifted,
         }
 
+    def metrics_into(self, registry) -> None:
+        """Publish controller state into a `repro.obs` registry — the pull
+        hook `Observability.attach_engine` finds through the engine's
+        `PrecisionRunner.controller` and runs at snapshot time."""
+        summary = self.summary()
+        registry.gauge("precision_decisions",
+                       "precision choices made so far").set(
+                           summary["decisions"])
+        registry.gauge("precision_downshifted",
+                       "unpinned requests downshifted to int4").set(
+                           self._downshifted)
+        registry.gauge("precision_model_disagreements",
+                       "decisions where Eq. 3 and the analytical model "
+                       "ranked precisions differently").set(
+                           summary["model_disagreements"])
+        for precision, count in sorted(summary["by_precision"].items()):
+            registry.gauge(f"precision_served_{precision}",
+                           f"requests decided to {precision}").set(count)
+        for reason, count in sorted(summary["by_reason"].items()):
+            registry.gauge(f"precision_reason_{reason}",
+                           f"decisions made for reason={reason!r}").set(count)
+        for precision, ewma in sorted(self.skip_ewma.items()):
+            registry.gauge(f"precision_skip_ewma_{precision}",
+                           f"realized skip-rate EWMA at {precision}").set(
+                               ewma)
+        delta = self.interplay_delta()
+        if delta is not None:
+            registry.gauge("precision_interplay_delta",
+                           "learned extra skip rate int4 delivers over "
+                           "fp32 (paper SIII coupling)").set(delta)
+
 
 def bind_controller(scheduler, controller: PrecisionController
                     ) -> PrecisionController:

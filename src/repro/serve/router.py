@@ -63,6 +63,7 @@ import dataclasses
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
                     Sequence, Set, Tuple, runtime_checkable)
 
+from ..obs import Observability, aggregate, merge_traces
 from .api import (EngineConfig, EngineStalled, ModelRunner, QueueFull,
                   Request, Result, SubmitSpec)
 from .core import EngineCore, all_finite
@@ -230,6 +231,13 @@ class Router:
     tick_s:         seconds the router advances an owned `TickClock` per
                     `step()` (deterministic deadline pacing, like
                     `core.StepClock`); 0 leaves the clock alone.
+    obs:            optional `repro.obs.Observability` bundle for
+                    *router-level* spans (one per request, submit ->
+                    terminal status, on the router's step index) and fleet
+                    counters. Per-replica observability lives on the
+                    engines/workers themselves (`make_router(obs=True)` /
+                    `make_worker_fleet(obs=True)`); `telemetry()` merges
+                    both layers into one trace + one metrics snapshot.
     """
 
     def __init__(self, replicas: Sequence[Any], *,
@@ -237,7 +245,7 @@ class Router:
                  wedge_patience: int = 3, stall_factor: float = 8.0,
                  stall_seconds: Optional[float] = None,
                  max_retries: int = 2, max_waiting: int = 64,
-                 tick_s: float = 0.0):
+                 tick_s: float = 0.0, obs: Optional[Observability] = None):
         assert replicas, "router needs at least one replica"
         transports = [r if not isinstance(r, EngineCore) else InProcTransport(r)
                       for r in replicas]
@@ -261,11 +269,15 @@ class Router:
         self._fastest_dt: Optional[float] = None    # learned fleet baseline
         self._counts = collections.Counter()
         self._rerouted = 0
-        #: [(router step, replica idx, condition, [router rids re-routed])]
-        #: — the supervision audit trail benches mine for recovery latency.
+        #: [(router step, replica idx, condition, [router rids re-routed],
+        #: detail)] — the supervision audit trail benches mine for recovery
+        #: latency. ``detail`` carries the condemned replica's last progress
+        #: marker + cost_finite probe and, when the replica was observed,
+        #: its flight-recorder postmortem under ``'dump'``.
         self.drain_log: List[tuple] = []
         #: router rid -> router step of its terminal result
         self.completed_at: Dict[int, int] = {}
+        self.obs = obs
 
     # -- request surface -----------------------------------------------------
 
@@ -298,6 +310,13 @@ class Router:
             None if spec.deadline_s is None else now + spec.deadline_s,
             affinity, self.max_retries)
         self._outstanding.add(rid)
+        if self.obs is not None:
+            if self.obs.tracer is not None:
+                self.obs.tracer.begin(rid, self._step_idx, now,
+                                      layer="router", priority=spec.priority)
+            if self.obs.metrics is not None:
+                self.obs.metrics.counter(
+                    "router_submitted", "requests admitted to the fleet").inc()
         self._try_place(rid)
         return rid
 
@@ -468,6 +487,14 @@ class Router:
                                   "consecutive steps with work resident")
             else:
                 replica.idle_steps = 0
+        if self.obs is not None and self.obs.metrics is not None:
+            m = self.obs.metrics
+            m.counter("router_steps", "fleet supervision rounds").inc()
+            m.gauge("router_waiting",
+                    "requests parked in the backoff line").set(
+                        len(self._waiting))
+            m.gauge("router_healthy_replicas",
+                    "replicas in HEALTHY state").set(len(self._healthy()))
         return sum(self._counts.values()) - finished_before
 
     def _learn_cost(self, replica: _Replica, marker0, dt: float) -> None:
@@ -548,8 +575,34 @@ class Router:
                 self._finish(rid, dataclasses.replace(
                     salvage or Result(rid, None, {}), status="failed"))
         replica.state = DRAINED
+        # postmortem detail: the supervision probes the parent already holds
+        # (heartbeat-cached for workers, direct reads in-process) plus the
+        # replica's flight-recorder dump when it was observed
+        detail: Dict[str, Any] = {
+            "reason": reason,
+            "marker": tuple(replica.transport.progress_marker()),
+            "cost_finite": replica.transport.cost_finite(),
+        }
+        dump = None
+        core = replica.core
+        if core is not None and getattr(core, "obs", None) is not None:
+            dump = core.obs.on_dump(condition, self._step_idx,
+                                    replica=replica.idx)
+        else:
+            dump_fn = getattr(replica.transport, "recorder_dump", None)
+            if dump_fn is not None:
+                dump = dump_fn(condition)
+        if dump is not None:
+            detail["dump"] = dump
+        if self.obs is not None and self.obs.metrics is not None:
+            self.obs.metrics.counter(
+                "router_drains", "replicas condemned and drained").inc()
+            self.obs.metrics.counter(
+                "router_rerouted",
+                "requests re-routed by deterministic replay").inc(
+                    len(rerouted))
         self.drain_log.append((self._step_idx, replica.idx, condition,
-                               rerouted))
+                               rerouted, detail))
 
     def _finish(self, rid: int, result: Result) -> None:
         if result.request_id != rid:
@@ -560,6 +613,14 @@ class Router:
         self._requests.pop(rid, None)
         self._counts[result.status] += 1
         self.completed_at[rid] = self._step_idx
+        if self.obs is not None:
+            if self.obs.tracer is not None:
+                self.obs.tracer.end(rid, result.status, self._step_idx,
+                                    self._clock())
+            if self.obs.metrics is not None:
+                self.obs.metrics.counter(
+                    f"router_retired_{result.status}",
+                    f"requests retired with status={result.status}").inc()
 
     # -- drain loop ----------------------------------------------------------
 
@@ -618,6 +679,41 @@ class Router:
                               "rejected")},
         }
 
+    def telemetry(self) -> Dict[str, Any]:
+        """One merged observability view of the whole fleet: every
+        replica's spans namespaced by replica index (plus the router's own
+        spans under ``'router'``) via `repro.obs.merge_traces`, per-replica
+        metrics folded with `repro.obs.aggregate`, and every
+        flight-recorder dump taken anywhere. Works for in-process replicas
+        (read off `EngineCore.obs` directly) and subprocess workers (read
+        off the heartbeat telemetry their transport accumulated); replicas
+        that were never observed simply contribute nothing."""
+        parts: List[Tuple[Any, List[Dict[str, Any]]]] = []
+        metrics_parts: Dict[Any, Mapping[str, Any]] = {}
+        dumps: List[Dict[str, Any]] = []
+        if self.obs is not None:
+            if self.obs.tracer is not None:
+                parts.append(("router", self.obs.tracer.export()))
+            if self.obs.metrics is not None:
+                metrics_parts["router"] = self.obs.metrics.snapshot()
+        for replica in self.replicas:
+            core = replica.core
+            if core is not None and getattr(core, "obs", None) is not None:
+                snap = core.obs.snapshot()
+                parts.append((replica.idx, snap.get("trace", [])))
+                if "metrics" in snap:
+                    metrics_parts[replica.idx] = snap["metrics"]
+                dumps.extend(snap.get("dumps", ()))
+            elif getattr(replica.transport, "obs", False):
+                tel = replica.transport.telemetry()
+                parts.append((replica.idx, tel.get("spans", [])))
+                if tel.get("metrics"):
+                    metrics_parts[replica.idx] = tel["metrics"]
+                dumps.extend(tel.get("dumps", ()))
+        return {"trace": merge_traces(parts),
+                "metrics": aggregate(metrics_parts),
+                "dumps": dumps}
+
     def close(self) -> None:
         """Release every replica's transport (terminates subprocess
         workers; a no-op for in-process fleets)."""
@@ -629,7 +725,7 @@ def make_router(runner: ModelRunner, n: int,
                 config: EngineConfig = EngineConfig(), *,
                 plans: Optional[Mapping[int, FaultPlan]] = None,
                 clock: Optional[Callable[[], float]] = None,
-                **router_kwargs) -> Router:
+                obs: bool = False, **router_kwargs) -> Router:
     """Build an N-replica fleet over one `ModelRunner`.
 
     Every replica gets its own `EngineCore` (own queue, slots, sessions)
@@ -638,22 +734,28 @@ def make_router(runner: ModelRunner, n: int,
     replica index -> plan; missing indices get the empty, transparent
     plan). All replicas and the router share one clock; when none is
     passed, a deterministic `TickClock` advanced 1 s per router step is
-    created — the fleet analogue of `core.StepClock`."""
+    created — the fleet analogue of `core.StepClock`.
+
+    obs=True attaches one `repro.obs.Observability` bundle per replica and
+    one to the router; `Router.telemetry()` then yields the merged fleet
+    trace/metrics/dumps. Off by default and bit-identical when on."""
     owned = clock is None
     if owned:
         clock = TickClock()
     plans = dict(plans or {})
     cores = [EngineCore(FaultyRunner(runner, plans.get(i), clock),
-                        config, clock=clock)
+                        config, clock=clock,
+                        obs=Observability() if obs else None)
              for i in range(n)]
     if owned:
         router_kwargs.setdefault("tick_s", 1.0)
-    return Router(cores, clock=clock, **router_kwargs)
+    return Router(cores, clock=clock,
+                  obs=Observability() if obs else None, **router_kwargs)
 
 
 def make_worker_fleet(spec: Any, n: int,
                       config: EngineConfig = EngineConfig(), *,
-                      step_timeout_s: float = 120.0,
+                      step_timeout_s: float = 120.0, obs: bool = False,
                       **router_kwargs) -> Router:
     """Build an N-worker *subprocess* fleet: one `serve.worker` process per
     replica, each hosting its own `EngineCore` + runner built from the
@@ -669,10 +771,16 @@ def make_worker_fleet(spec: Any, n: int,
     (`TransportError` -> condemn -> replay) carry the supervision load.
     Pass ``stall_seconds`` for an absolute hang bound below the
     transport's own ``step_timeout_s``.
+
+    obs=True asks every worker (via the v2 hello) to observe its engine
+    and ship telemetry increments on each heartbeat; `Router.telemetry()`
+    merges them — spans from all workers plus the router's own — into one
+    cross-process trace.
     """
     from .worker import SubprocessTransport
     transports = [SubprocessTransport(spec, config,
-                                      step_timeout_s=step_timeout_s)
+                                      step_timeout_s=step_timeout_s, obs=obs)
                   for _ in range(n)]
     router_kwargs.setdefault("stall_factor", float("inf"))
-    return Router(transports, **router_kwargs)
+    return Router(transports,
+                  obs=Observability() if obs else None, **router_kwargs)

@@ -256,6 +256,23 @@ class SparsityAwareScheduler:
         for listener in self.listeners:
             listener(request, result, skip)
 
+    def metrics_into(self, registry) -> None:
+        """Publish learned skip-rate state into a `repro.obs` registry —
+        the pull hook `Observability.attach_engine` registers as a
+        snapshot-time collector (never called on the hot path)."""
+        registry.gauge(
+            "scheduler_skip_ewma_global",
+            "global EWMA of observed tile-skip rates").set(
+                self._global if self._global is not None else self.prior)
+        registry.gauge(
+            "scheduler_resident_requests",
+            "requests the scheduler currently tracks as resident").set(
+                len(self._resident))
+        for src, ewma in sorted(self._by_source.items()):
+            registry.gauge(
+                f"scheduler_skip_ewma_source_{src}",
+                f"per-source skip-rate EWMA (source={src!r})").set(ewma)
+
 
 class SLOScheduler:
     """Deadline/priority admission + per-step budget split over an inner policy.
@@ -523,6 +540,28 @@ class SLOScheduler:
             if est is not None and now + est > req.deadline_at:
                 out.append(req.request_id)
         return out
+
+    def metrics_into(self, registry) -> None:
+        """Publish the learned cost model into a `repro.obs` registry
+        (snapshot-time pull hook; see `SparsityAwareScheduler.metrics_into`).
+        Unlearned figures read 0. Delegates to the inner policy too, so
+        'slo:sparsity' publishes both layers."""
+        registry.gauge(
+            "scheduler_sec_per_step",
+            "fastest observed engine-clock seconds per step").set(
+                self._sec_per_step or 0.0)
+        for kind in ("lm", "snn"):
+            registry.gauge(
+                f"scheduler_sec_per_unit_{kind}",
+                f"fastest observed seconds per {kind} work unit").set(
+                    self._sec_per_unit.get(kind, 0.0))
+        registry.gauge(
+            "scheduler_max_decode_per_slot_step",
+            "most decode tokens one slot emitted in one step").set(
+                self._max_decode_per_slot_step)
+        inner_publish = getattr(self.inner, "metrics_into", None)
+        if inner_publish is not None:
+            inner_publish(registry)
 
 
 SCHEDULERS = {

@@ -42,8 +42,12 @@ import numpy as np
 
 from .api import Request, Result
 
-#: bump on any incompatible change to the message set or the codec
-PROTOCOL_VERSION = 1
+#: bump on any incompatible change to the message set or the codec.
+#: v2: `HelloMsg.obs` opt-in + `HeartbeatMsg.telemetry` (observability
+#: increments piggybacking on the step reply). Both are default-valued —
+#: same-build peers always agree, and the version stamp keeps a v1 peer
+#: from half-decoding a v2 stream.
+PROTOCOL_VERSION = 2
 
 #: refuse frames larger than this (corrupted length prefix guard)
 MAX_FRAME_BYTES = 1 << 30
@@ -149,10 +153,15 @@ class HelloMsg:
     """Parent -> worker handshake opener. ``runner`` is the wire form of a
     `serve.worker.RunnerSpec`; ``config`` the `api.EngineConfig` fields.
     The frame's version field *is* the version check — a mismatched worker
-    never gets as far as reading these fields."""
+    never gets as far as reading these fields.
+
+    obs: when True the worker attaches a `repro.obs.Observability` bundle
+    to its engine and ships telemetry increments on every heartbeat
+    (v2, default off — the observability plane is strictly opt-in)."""
     TYPE: ClassVar[str] = "hello"
     runner: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    obs: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -272,6 +281,12 @@ class HeartbeatMsg:
     pending:
     stats:       the full `EngineCore.stats()` mapping (fleet dashboards);
                  supervision only needs the scalar fields above.
+    telemetry:   observability increment (v2, None unless `HelloMsg.obs`):
+                 ``{spans, metrics, frames[, dumps]}`` from
+                 `repro.obs.Observability.wire_telemetry` — newly closed
+                 trace spans, the current metrics snapshot, a recorder
+                 frame tail (postmortem cushion if the worker dies before
+                 its next heartbeat) and any fresh recorder dumps.
     """
     TYPE: ClassVar[str] = "heartbeat"
     seq: int = 0
@@ -281,6 +296,7 @@ class HeartbeatMsg:
     in_flight: int = 0
     pending: int = 0
     stats: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    telemetry: Any = None
 
 
 @dataclasses.dataclass(frozen=True)

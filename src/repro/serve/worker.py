@@ -218,11 +218,12 @@ class _StubRunner:
 
 def _heartbeat(core: EngineCore, seq: int) -> HeartbeatMsg:
     report = core.last_report
+    telemetry = core.obs.wire_telemetry() if core.obs is not None else None
     return HeartbeatMsg(seq=seq, marker=core._progress_marker(),
                         failed=core._failed,
                         cost_finite=report is None or all_finite(report.cost),
                         in_flight=core.in_flight(), pending=core.pending(),
-                        stats=core.stats())
+                        stats=core.stats(), telemetry=telemetry)
 
 
 def serve_connection(rfile, wfile) -> int:
@@ -248,7 +249,11 @@ def serve_connection(rfile, wfile) -> int:
     try:
         spec = RunnerSpec.from_wire(hello.runner)
         config = EngineConfig(**dict(hello.config))
-        core = EngineCore(build_runner(spec), config)
+        obs = None
+        if hello.obs:
+            from ..obs import Observability
+            obs = Observability()
+        core = EngineCore(build_runner(spec), config, obs=obs)
     except Exception as e:              # bad spec/config: refuse loudly
         send(ErrorMsg(error=f"worker build failed: {e!r}"))
         return 2
@@ -348,7 +353,7 @@ class SubprocessTransport:
     def __init__(self, spec: RunnerSpec, config: EngineConfig = EngineConfig(),
                  *, step_timeout_s: float = 120.0,
                  handshake_timeout_s: float = 300.0,
-                 python: str = sys.executable,
+                 python: str = sys.executable, obs: bool = False,
                  _hello_version: Optional[int] = None):
         self.spec = spec
         self.config = config
@@ -361,6 +366,15 @@ class SubprocessTransport:
         self._results: Dict[int, Result] = {}
         self._partials: Dict[int, List[Any]] = {}
         self._live: Set[int] = set()    # submitted, no terminal result yet
+        #: telemetry accumulated from heartbeats when the hello asked the
+        #: worker to observe. Spans accumulate (each heartbeat ships the
+        #: increment); metrics/frames are replaced by the newest snapshot —
+        #: so the *last* heartbeat before a crash is the postmortem source.
+        self.obs = obs
+        self._spans: List[Dict[str, Any]] = []
+        self._metrics: Dict[str, Any] = {}
+        self._frames: List[Dict[str, Any]] = []
+        self._dumps: List[Dict[str, Any]] = []
         env = dict(os.environ)
         src_root = str(Path(__file__).resolve().parents[2])
         env["PYTHONPATH"] = src_root + (
@@ -373,7 +387,7 @@ class SubprocessTransport:
             stdin=subprocess.PIPE, stdout=subprocess.PIPE, bufsize=0, env=env)
         try:
             self._send(HelloMsg(runner=spec.to_wire(),
-                                config=dataclasses.asdict(config)),
+                                config=dataclasses.asdict(config), obs=obs),
                        version=_hello_version)
             reply = self._recv(handshake_timeout_s)
         except TransportError:
@@ -489,6 +503,14 @@ class SubprocessTransport:
             self._mark_dead(f"bad step reply {type(reply).__name__}")
             raise WorkerDied(self._dead)
         self._hb = reply
+        telemetry = reply.telemetry
+        if telemetry:
+            self._spans.extend(telemetry.get("spans") or ())
+            if telemetry.get("metrics") is not None:
+                self._metrics = telemetry["metrics"]
+            if telemetry.get("frames") is not None:
+                self._frames = list(telemetry["frames"])
+            self._dumps.extend(telemetry.get("dumps") or ())
 
     def poll(self, request_id: int) -> Optional[Result]:
         return self._results.pop(request_id, None)
@@ -530,6 +552,29 @@ class SubprocessTransport:
 
     def max_idle_steps(self) -> int:
         return self.config.max_idle_steps
+
+    # -- observability surface (probed by the router via getattr) ------------
+
+    def telemetry(self) -> Dict[str, Any]:
+        """Everything this transport has learned from worker heartbeats:
+        closed spans (accumulated), the latest metrics snapshot, the latest
+        recorder frame tail, and every recorder dump. Spans still open in
+        the worker at death are lost — the frame tail is the cushion."""
+        return {"spans": list(self._spans), "metrics": dict(self._metrics),
+                "frames": list(self._frames), "dumps": list(self._dumps)}
+
+    def recorder_dump(self, reason: str) -> Optional[Dict[str, Any]]:
+        """Parent-side postmortem from the last heartbeat's frame tail —
+        the `WorkerDied` path, where the worker can no longer dump for
+        itself. None when the hello never asked the worker to observe."""
+        if not self.obs:
+            return None
+        dump = {"reason": reason,
+                "step": self._frames[-1]["step"] if self._frames else None,
+                "frames": list(self._frames), "notes": [],
+                "worker_pid": self.pid}
+        self._dumps.append(dump)
+        return dump
 
     def kill(self) -> None:
         """SIGKILL the worker (chaos harness). The transport does *not*

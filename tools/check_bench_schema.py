@@ -19,6 +19,11 @@ bit-identity flag and sampled seed-determinism flag.
 `serve_engine_fleet` records: in-process and subprocess serving modes must
 both report their per-router-step wall time (the IPC overhead comparison),
 and the chaos pass its kill->replay outcome flags.
+`serve_engine_obs` records: the observability-attached fleet pass must
+report its measured overhead vs detached serving, the merged cross-process
+trace size, and the bit-identity (no-perturbation) flag.
+Duplicate records — same ``(name, config, timestamp)`` — are rejected
+file-wide: they are double-appends, not new measurements.
 Stdlib-only — runs in the docs CI job without the jax toolchain.
 
     python tools/check_bench_schema.py [BENCH_results.json ...]
@@ -225,6 +230,37 @@ def check_fleet_record(rec) -> list:
     return problems
 
 
+# bench_fleet's observability pass (serve_engine_obs records): the obs tax
+# vs the detached subprocess fleet, the merged cross-process trace size, and
+# the no-perturbation flag the CI smoke guard gates on.
+OBS_NUMERIC = ("wall_s", "step_ms", "overhead_x", "merged_trace_spans",
+               "engine_steps")
+OBS_BOOL = ("bit_identical",)
+
+
+def check_obs_record(rec) -> list:
+    problems = []
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict):
+        return problems                 # shape error already reported
+    obs = metrics.get("obs")
+    if not isinstance(obs, dict):
+        return ["metrics.obs missing or not an object"]
+    for k in OBS_NUMERIC:
+        if k not in obs:
+            problems.append(f"metrics.obs missing '{k}'")
+        elif isinstance(obs[k], bool) or not isinstance(obs[k], (int, float)):
+            problems.append(f"metrics.obs.{k} must be numeric")
+    for k in OBS_BOOL:
+        if k not in obs:
+            problems.append(f"metrics.obs missing '{k}'")
+        elif not isinstance(obs[k], bool):
+            problems.append(f"metrics.obs.{k} must be a bool")
+    if not isinstance(obs.get("trace_replicas"), list):
+        problems.append("metrics.obs.trace_replicas must be a list")
+    return problems
+
+
 def check_record(rec) -> list:
     problems = []
     if not isinstance(rec, dict):
@@ -247,7 +283,20 @@ def check_record(rec) -> list:
         problems += check_speculative_record(rec)
     if rec.get("name") == "serve_engine_fleet":
         problems += check_fleet_record(rec)
+    if rec.get("name") == "serve_engine_obs":
+        problems += check_obs_record(rec)
     return problems
+
+
+def record_key(rec):
+    """Measurement-event identity: a second record with the same name,
+    config and timestamp adds no information — it is a double-append
+    (`benchmarks.common.append_result` now drops these at write time)."""
+    if not isinstance(rec, dict):
+        return None
+    return (rec.get("name"),
+            json.dumps(rec.get("config", {}), sort_keys=True),
+            rec.get("timestamp"))
 
 
 def check_file(path: str) -> int:
@@ -264,8 +313,16 @@ def check_file(path: str) -> int:
         print(f"{path}: top level must be a JSON list of records")
         return 1
     errors = 0
+    seen = {}
     for i, rec in enumerate(data):
         problems = check_record(rec)
+        key = record_key(rec)
+        if key is not None and key in seen:
+            problems = problems + [
+                f"duplicate of record [{seen[key]}] "
+                "(same name, config and timestamp)"]
+        elif key is not None:
+            seen[key] = i
         if problems:
             errors += 1
             label = rec.get("name", "?") if isinstance(rec, dict) else "?"
